@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: WALL-E iteration harness + CSV emission.
+
+Measurement methodology on a 1-core container (DESIGN.md §2): each
+sampler's work is executed and timed separately; the *critical path* of an
+N-parallel deployment is the max over samplers (reported), the N=1 cost is
+the sum. Queue/orchestration overhead is measured from the async runtime.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+from repro import envs
+from repro.algos.ppo import PPOConfig, make_mlp_learner
+from repro.core import sampler as sampler_mod
+from repro.core.orchestrator import SyncRunner
+from repro.models import mlp_policy
+from repro.optim import adam
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def build_walle(env_name: str, num_samplers: int, total_samples: int,
+                env_batch: int = 8, seed: int = 0):
+    """The paper's setup: PPO + MLP policy + N samplers splitting a fixed
+    per-iteration sample budget (20000 in the paper)."""
+    env = envs.make(env_name)
+    key = jax.random.PRNGKey(seed)
+    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 64)
+    opt = adam(3e-4)
+    learn = make_mlp_learner(opt, PPOConfig(epochs=4, minibatches=4))
+    per_sampler = total_samples // num_samplers
+    horizon = max(1, per_sampler // env_batch)
+    rollout = sampler_mod.make_env_rollout(env, horizon)
+    carries = [
+        sampler_mod.init_env_carry(env, jax.random.PRNGKey(seed + 1 + i),
+                                   env_batch)
+        for i in range(num_samplers)
+    ]
+    return SyncRunner(rollout, learn, params, opt.init(params), carries,
+                      num_samplers)
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters

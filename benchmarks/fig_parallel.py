@@ -1,0 +1,106 @@
+"""Paper figures 3-7: the parallel-sampler measurements.
+
+* Fig 3 — average return, N=10 vs N=1 (same per-iteration sample budget;
+  the N=10 run additionally reports its wall-clock advantage).
+* Fig 4 — rollout (collection) time vs N at a fixed total sample budget.
+* Fig 5 — speedup T(1)/T(N) (derived from Fig 4).
+* Fig 6 — % of iteration time in learning vs collection, vs N.
+* Fig 7 — absolute policy-learning time per iteration vs N (~flat).
+
+Scaled for a 1-core CPU container: budget defaults to 4096 samples /
+iteration instead of the paper's 20000 (same shape of the curves; the
+measurement is the per-sampler critical path, see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from benchmarks.common import build_walle, emit
+
+NS = (1, 2, 4, 8, 10)
+
+
+def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
+                       per_sampler: int = 2048) -> Dict:
+    """The paper's comparison: N=10 vs N=1 at equal *wall-clock*.
+
+    Each sampler does the same work per iteration (same env batch, same
+    horizon -> equal collection critical path); N=10 therefore learns from
+    10x the experience per iteration and should reach higher return — the
+    paper's Fig 3 claim. Iteration 0 (jit compile) is excluded from the
+    wall-clock accounting.
+    """
+    out = {}
+    for n in (1, 10):
+        runner = build_walle(env_name, n, per_sampler * n, env_batch=8,
+                             seed=42)
+        logs = runner.run(iterations)
+        rets = [l.mean_return for l in logs if l.mean_return != 0.0]
+        out[f"N={n}"] = {
+            "returns": [l.mean_return for l in logs],
+            "collect_time": [l.collect_time for l in logs[1:]],
+            "final_return": rets[-1] if rets else float("nan"),
+        }
+        emit(f"fig3_return_N{n}_final",
+             sum(out[f"N={n}"]["collect_time"]) * 1e6 / (iterations - 1),
+             f"return={out[f'N={n}']['final_return']:.1f} "
+             f"(samples/iter={per_sampler * n})")
+    t1 = sum(out["N=1"]["collect_time"])
+    t10 = sum(out["N=10"]["collect_time"])
+    gain = out["N=10"]["final_return"] - out["N=1"]["final_return"]
+    emit("fig3_N10_vs_N1", 0.0,
+         f"return_gain={gain:+.1f} at collect-time ratio "
+         f"x{t10 / max(t1, 1e-9):.2f} (1.0 = equal wall-clock)")
+    return out
+
+
+def fig4_rollout_time(env_name: str = "cheetah", budget: int = 4096,
+                      iterations: int = 3) -> Dict[int, float]:
+    times = {}
+    for n in NS:
+        runner = build_walle(env_name, n, budget, env_batch=8, seed=7)
+        logs = runner.run(iterations)
+        # skip iteration 0 (jit compile)
+        ts = [l.collect_time for l in logs[1:]]
+        times[n] = sum(ts) / len(ts)
+        emit(f"fig4_rollout_time_N{n}", times[n] * 1e6,
+             f"samples={budget}")
+    return times
+
+
+def fig5_speedup(times: Dict[int, float]) -> Dict[int, float]:
+    t1 = times[1]
+    speedups = {n: t1 / t for n, t in times.items()}
+    for n, s in speedups.items():
+        linear = "near-linear" if s > 0.6 * n else "sub-linear"
+        emit(f"fig5_speedup_N{n}", times[n] * 1e6, f"x{s:.2f} ({linear})")
+    return speedups
+
+
+def fig6_fig7_time_split(env_name: str = "cheetah", budget: int = 4096,
+                         iterations: int = 3) -> Dict:
+    out = {}
+    for n in NS:
+        runner = build_walle(env_name, n, budget, env_batch=8, seed=13)
+        logs = runner.run(iterations)
+        collect = sum(l.collect_time for l in logs[1:])
+        learn = sum(l.learn_time for l in logs[1:])
+        frac_learn = learn / (learn + collect)
+        mean_learn = learn / (len(logs) - 1)
+        out[n] = {"frac_learn": frac_learn, "learn_time": mean_learn}
+        emit(f"fig6_learn_fraction_N{n}", 0.0, f"{100 * frac_learn:.1f}%")
+        emit(f"fig7_learn_time_N{n}", mean_learn * 1e6, "per-iteration")
+    return out
+
+
+def run_all(out_path: str = "results/paper_figs.json") -> None:
+    import os
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {"fig3": fig3_return_curves()}
+    times = fig4_rollout_time()
+    results["fig4"] = times
+    results["fig5"] = fig5_speedup(times)
+    results["fig6_fig7"] = fig6_fig7_time_split()
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, default=float)

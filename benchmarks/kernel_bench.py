@@ -1,0 +1,67 @@
+"""Microbenchmarks of the sampler's compute hot-spots (CPU reference
+implementations — the Pallas kernels are TPU-target and interpret mode is a
+correctness harness, not a timing one)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.models import attention as A
+from repro.models.ssm import selective_scan as model_scan
+
+
+def attention_bench():
+    key = jax.random.PRNGKey(0)
+    for S in (512, 1024, 2048):
+        B, K, G, hd = 1, 4, 2, 64
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, K, G, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+        f = jax.jit(lambda q, k, v: A.full_causal(q, k, v, leaf=512,
+                                                  kv_block=512))
+        dt = timed(f, q, k, v)
+        flops = 2 * 2 * B * K * G * S * S / 2 * hd
+        emit(f"attn_causal_S{S}", dt * 1e6,
+             f"{flops / dt / 1e9:.1f}GFLOP/s")
+        fw = jax.jit(lambda q, k, v: A.swa(q, k, v, 256, q_block=256))
+        dtw = timed(fw, q, k, v)
+        emit(f"attn_swa256_S{S}", dtw * 1e6, "")
+
+
+def scan_bench():
+    key = jax.random.PRNGKey(1)
+    for S, Di in ((512, 256), (1024, 512)):
+        B, N = 1, 16
+        ks = jax.random.split(key, 5)
+        dt_in = jax.nn.softplus(jax.random.normal(ks[0], (B, S, Di))) * 0.1
+        Am = -jnp.exp(jax.random.normal(ks[1], (Di, N)) * 0.2)
+        b = jax.random.normal(ks[2], (B, S, N))
+        c = jax.random.normal(ks[3], (B, S, N))
+        x = jax.random.normal(ks[4], (B, S, Di))
+        h0 = jnp.zeros((B, Di, N))
+        f = jax.jit(lambda *a: model_scan(*a, chunk=128))
+        t = timed(f, dt_in, Am, b, c, x, h0)
+        emit(f"selective_scan_S{S}_D{Di}", t * 1e6,
+             f"{B * S * Di * N / t / 1e6:.0f}Melem/s")
+
+
+def decode_bench():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    key = jax.random.PRNGKey(2)
+    for arch in ("hymba-1.5b", "mixtral-8x7b"):
+        cfg = get_config(arch).reduced()
+        params = T.init_params(cfg, key)
+        state = T.init_decode_state(cfg, 4, 128)
+        tok = jnp.zeros((4, 1), jnp.int32)
+        f = jax.jit(lambda p, s, t: T.decode_step(cfg, p, s, t))
+        t = timed(f, params, state, tok)
+        emit(f"decode_step_{arch}-reduced", t * 1e6, "B=4")
+
+
+def run_all():
+    attention_bench()
+    scan_bench()
+    decode_bench()

@@ -1,0 +1,148 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Per (arch x shape x mesh), from results/dryrun/*.json:
+  compute term    = dot_flops_per_device / PEAK_FLOPS        [s]
+  memory term     = hbm_bytes_per_device / HBM_BW            [s]
+                    (hbm_bytes ~ args + outputs + 2*temps: weights/inputs
+                    read, temps written+read; cost_analysis 'bytes accessed'
+                    is reported too but does not weight loop trip counts)
+  collective term = collective_bytes_per_device / ICI_BW     [s]
+                    (trip-count-weighted, parsed from partitioned HLO)
+
+MODEL_FLOPS (useful work) = 6*N_active*tokens (train) / 2*N_active*tokens
+(prefill) / 2*N_active*batch (decode, one token), per device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_SUGGEST = {
+    "compute": ("raise arithmetic efficiency: larger per-device batch, "
+                "drop attention-head padding waste, or reduce remat "
+                "recompute"),
+    "memory": ("cut HBM traffic: fuse elementwise chains, keep weights "
+               "resident (less remat), or quantize weights/cache"),
+    "collective": ("cut traffic on the slowest axis: resident-weight "
+                   "layout instead of FSDP gathers, overlap collectives "
+                   "with compute, or quantize gathered operands"),
+}
+
+
+def analyze_one(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    mem = rec["memory"]
+    hbm_bytes = (mem["argument_bytes"] + mem["output_bytes"]
+                 + 2 * mem["temp_bytes"])
+    compute_t = rec["dot_flops_per_device"] / PEAK_FLOPS
+    memory_t = hbm_bytes / HBM_BW
+    coll = rec["collectives"]
+    # bf16-equivalent corrects XLA-CPU's f32 dot-operand upcast (2x gather
+    # inflation vs a TPU lowering); absent in older artifacts
+    coll_t = coll.get("total_bytes_bf16eq", coll["total_bytes"]) / ICI_BW
+    n_active = rec["active_params"]
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.tokens
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.tokens
+    else:
+        model_flops = 2 * n_active * shape.global_batch
+    model_flops_dev = model_flops / chips
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    ratio = (model_flops_dev / rec["dot_flops_per_device"]
+             if rec["dot_flops_per_device"] else 0.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_t, "memory_s": memory_t,
+        "collective_s": coll_t, "dominant": dominant,
+        "model_flops_per_device": model_flops_dev,
+        "hlo_dot_flops_per_device": rec["dot_flops_per_device"],
+        "useful_flops_ratio": ratio,
+        "hbm_gib_per_device": (mem["argument_bytes"] + mem["temp_bytes"])
+        / 2 ** 30,
+        "fits_16gib": (mem["argument_bytes"] + mem["temp_bytes"])
+        < 16 * 2 ** 30,
+        "suggestion": _SUGGEST[dominant],
+    }
+
+
+def load_all(dryrun_dir: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_one(rec)
+        if row is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh", "?"),
+                         "dominant": rec.get("status"),
+                         "skip_reason": rec.get("reason",
+                                                rec.get("error", ""))})
+        else:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful/HLO flops | HBM GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "compute_s" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['dominant']} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['hbm_gib_per_device']:.1f} | "
+            f"{'y' if r.get('fits_16gib') else 'n'} |")
+    return "\n".join(lines)
+
+
+def main(dryrun_dir: str = "results/dryrun",
+         out_json: str = "results/roofline.json") -> List[Dict]:
+    rows = load_all(dryrun_dir)
+    if not rows:
+        print("roofline: no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return []
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=2)
+    from benchmarks.common import emit
+    for r in rows:
+        if "compute_s" in r:
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                 max(r["compute_s"], r["memory_s"], r["collective_s"])
+                 * 1e6,
+                 f"dominant={r['dominant']} ratio="
+                 f"{r['useful_flops_ratio']:.2f}")
+        else:
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+                 f"{r['dominant']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

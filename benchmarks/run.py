@@ -1,0 +1,28 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig3_*  return curves N=10 vs N=1            (paper Fig 3)
+  fig4_*  rollout time vs N                    (paper Fig 4)
+  fig5_*  collection speedup vs N              (paper Fig 5)
+  fig6_*  learning-time fraction vs N          (paper Fig 6)
+  fig7_*  learning time per iteration vs N     (paper Fig 7)
+  attn_* / selective_scan_* / decode_step_*    sampler hot-spot microbenches
+  roofline_*  three-term roofline per (arch x shape x mesh)  [§Roofline]
+
+The roofline section reads results/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all --both-meshes`` (run it first; rows
+are skipped gracefully if absent).
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import fig_parallel, kernel_bench, roofline
+    fig_parallel.run_all()
+    kernel_bench.run_all()
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

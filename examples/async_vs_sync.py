@@ -1,0 +1,56 @@
+"""The paper's architecture (Fig 2) end-to-end: asynchronous sampler threads
++ policy/experience queues vs the synchronous baseline, with staleness and
+queue accounting printed.
+
+  PYTHONPATH=src python examples/async_vs_sync.py
+"""
+import time
+
+import jax
+
+from repro import envs
+from repro.algos.ppo import PPOConfig, make_mlp_learner
+from repro.core import AsyncOrchestrator, SyncRunner
+from repro.core import sampler as S
+from repro.models import mlp_policy
+from repro.optim import adam
+
+N = 3
+UPDATES = 6
+
+
+def build(cls, **kw):
+    env = envs.make("cartpole")
+    key = jax.random.PRNGKey(0)
+    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 32)
+    opt = adam(1e-3)
+    learn = make_mlp_learner(opt, PPOConfig(epochs=2, minibatches=2))
+    rollout = S.make_env_rollout(env, horizon=128)
+    carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), 8)
+               for i in range(N)]
+    return cls(rollout, learn, params, opt.init(params), carries, N, **kw)
+
+
+if __name__ == "__main__":
+    sync = build(SyncRunner)
+    t0 = time.perf_counter()
+    sync_logs = sync.run(UPDATES)
+    t_sync = time.perf_counter() - t0
+
+    orch = build(AsyncOrchestrator, min_batches_per_update=2)
+    t0 = time.perf_counter()
+    async_logs = orch.run(UPDATES, timeout=300)
+    t_async = time.perf_counter() - t0
+
+    print(f"\nsync:  {UPDATES} updates in {t_sync:.1f}s, final return "
+          f"{sync_logs[-1].mean_return:.1f}")
+    print(f"async: {UPDATES} updates in {t_async:.1f}s, final return "
+          f"{async_logs[-1].mean_return:.1f}")
+    print(f"async policy staleness (mean versions behind): "
+          f"{orch.expq.mean_staleness():.2f}")
+    print(f"async queue waits: mean "
+          f"{sum(orch.expq.queue_wait) / max(len(orch.expq.queue_wait), 1):.3f}s "
+          f"over {orch.expq.put_count} experiences from {N} samplers")
+    print("\nthe async agent never blocks on a single slow sampler — the "
+          "paper's Fig 2 architecture; staleness is the price, bounded by "
+          "queue depth")

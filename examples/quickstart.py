@@ -1,0 +1,50 @@
+"""Quickstart: WALL-E's experiment in miniature.
+
+PPO on a pure-JAX pendulum with N=4 parallel samplers vs N=1, printing the
+per-iteration collection/learning split — the paper's Figs 3/6 story in
+~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro import envs
+from repro.algos.ppo import PPOConfig, make_mlp_learner
+from repro.core import SyncRunner
+from repro.core import sampler as S
+from repro.models import mlp_policy
+from repro.optim import adam
+
+
+def run(num_samplers: int, iterations: int = 8):
+    env = envs.make("pendulum")
+    key = jax.random.PRNGKey(0)
+    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 64)
+    opt = adam(1e-3)
+    learn = make_mlp_learner(opt, PPOConfig(epochs=4, minibatches=4))
+    rollout = S.make_env_rollout(env, horizon=200)
+    carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), 8)
+               for i in range(num_samplers)]
+    runner = SyncRunner(rollout, learn, params, opt.init(params), carries,
+                        num_samplers)
+    logs = runner.run(iterations)
+    print(f"\n=== N={num_samplers} parallel samplers ===")
+    for log in logs:
+        print(f"iter {log.iteration}: return={log.mean_return:8.1f}  "
+              f"collect={log.collect_time:.3f}s "
+              f"(serial-equivalent {log.collect_time_serial:.3f}s)  "
+              f"learn={log.learn_time:.3f}s  samples={log.samples}")
+    return logs
+
+
+if __name__ == "__main__":
+    one = run(1)
+    four = run(4)
+    t1 = sum(l.collect_time for l in one[1:])
+    t4 = sum(l.collect_time for l in four[1:])
+    print(f"\ncollection critical path per iteration: N=1 {t1:.3f}s vs "
+          f"N=4 {t4:.3f}s (equal per-sampler work -> ~equal wall-clock)")
+    print("N=4 collected", sum(l.samples for l in four),
+          "samples vs", sum(l.samples for l in one), "for N=1 in that "
+          "time — more experience per wall-clock iteration is the paper's "
+          "Fig 3 claim")

@@ -1,0 +1,1 @@
+from repro.algos import ddpg, gae, ppo  # noqa: F401

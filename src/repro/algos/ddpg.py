@@ -1,0 +1,93 @@
+"""DDPG with replay buffer — the paper's §6 "further work" item 1.
+
+Off-policy learning benefits even more from parallel experience collection
+(the paper's own argument); samplers fill a shared replay buffer and the
+learner draws uniform minibatches asynchronously.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp_policy import init_mlp_net, mlp_apply
+from repro.optim import apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    actor_lr: float = 1e-3
+    critic_lr: float = 1e-3
+    gamma: float = 0.99
+    tau: float = 0.005              # polyak target update
+    noise_std: float = 0.1
+
+
+def init_ddpg(key, obs_dim: int, act_dim: int, hidden: int = 64) -> Dict:
+    ka, kc = jax.random.split(key)
+    actor = init_mlp_net(ka, [obs_dim, hidden, hidden, act_dim])
+    critic = init_mlp_net(kc, [obs_dim + act_dim, hidden, hidden, 1])
+    return {
+        "actor": actor,
+        "critic": critic,
+        "target_actor": jax.tree.map(jnp.copy, actor),
+        "target_critic": jax.tree.map(jnp.copy, critic),
+    }
+
+
+def actor_apply(net, obs) -> jnp.ndarray:
+    return jnp.tanh(mlp_apply(net, obs))
+
+
+def critic_apply(net, obs, act) -> jnp.ndarray:
+    return mlp_apply(net, jnp.concatenate([obs, act], axis=-1))[..., 0]
+
+
+def explore_action(params, obs, key, cfg: DDPGConfig) -> jnp.ndarray:
+    a = actor_apply(params["actor"], obs)
+    return jnp.clip(a + cfg.noise_std * jax.random.normal(key, a.shape),
+                    -1.0, 1.0)
+
+
+def ddpg_update(params, opt_states, batch, cfg: DDPGConfig,
+                actor_opt, critic_opt) -> Tuple[Dict, Tuple, Dict]:
+    """One gradient step on a replay minibatch.
+
+    batch: obs, actions, rewards, next_obs, dones — all (N, ...).
+    """
+    nonterm = 1.0 - batch["dones"].astype(jnp.float32)
+    a_next = actor_apply(params["target_actor"], batch["next_obs"])
+    q_next = critic_apply(params["target_critic"], batch["next_obs"], a_next)
+    target = batch["rewards"] + cfg.gamma * nonterm * q_next
+
+    def critic_loss(cnet):
+        q = critic_apply(cnet, batch["obs"], batch["actions"])
+        return jnp.mean((q - jax.lax.stop_gradient(target)) ** 2)
+
+    c_loss, c_grads = jax.value_and_grad(critic_loss)(params["critic"])
+    c_upd, c_state = critic_opt.update(c_grads, opt_states[1],
+                                       params["critic"])
+    critic = apply_updates(params["critic"], c_upd)
+
+    def actor_loss(anet):
+        a = actor_apply(anet, batch["obs"])
+        return -jnp.mean(critic_apply(critic, batch["obs"], a))
+
+    a_loss, a_grads = jax.value_and_grad(actor_loss)(params["actor"])
+    a_upd, a_state = actor_opt.update(a_grads, opt_states[0],
+                                      params["actor"])
+    actor = apply_updates(params["actor"], a_upd)
+
+    polyak = lambda t, s: jax.tree.map(
+        lambda a, b: (1 - cfg.tau) * a + cfg.tau * b, t, s)
+    new_params = {
+        "actor": actor,
+        "critic": critic,
+        "target_actor": polyak(params["target_actor"], actor),
+        "target_critic": polyak(params["target_critic"], critic),
+    }
+    metrics = {"critic_loss": c_loss, "actor_loss": a_loss,
+               "q_mean": jnp.mean(target)}
+    return new_params, (a_state, c_state), metrics

@@ -1,0 +1,158 @@
+"""Proximal Policy Optimization — the learner in WALL-E's agent processor.
+
+Two instantiations share the same clipped-surrogate math:
+* ``mlp_ppo_*`` — Gaussian-MLP policy on continuous-control envs (the
+  paper's experimental setup);
+* ``lm_ppo_loss`` — token-level PPO on a sequence-model policy (the
+  RLHF-style workload the assigned architectures serve; this is what
+  ``train_4k`` lowers in the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos import gae as gae_mod
+from repro.models import mlp_policy, transformer
+from repro.optim import adam, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    clip_eps: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    gamma: float = 0.99
+    lam: float = 0.95
+    epochs: int = 4
+    minibatches: int = 4
+    max_grad_norm: float = 0.5
+    aux_coef: float = 0.01          # MoE router load-balance weight
+
+
+def clipped_surrogate(logp, behavior_logp, adv, clip_eps) -> jnp.ndarray:
+    ratio = jnp.exp(logp - behavior_logp)
+    return -jnp.minimum(ratio * adv,
+                        jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv)
+
+
+# ============================================================ MLP policy PPO
+def mlp_ppo_loss(params, batch: Dict[str, jnp.ndarray], cfg: PPOConfig):
+    logp = mlp_policy.action_logp(params, batch["obs"], batch["actions"])
+    pg = jnp.mean(clipped_surrogate(logp, batch["behavior_logp"],
+                                    batch["advantages"], cfg.clip_eps))
+    v = mlp_policy.value_apply(params, batch["obs"])
+    v_loss = 0.5 * jnp.mean((v - batch["returns"]) ** 2)
+    ent = mlp_policy.entropy(params)
+    loss = pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
+    metrics = {"loss": loss, "pg_loss": pg, "v_loss": v_loss, "entropy": ent,
+               "approx_kl": jnp.mean(batch["behavior_logp"] - logp)}
+    return loss, metrics
+
+
+def mlp_ppo_update(params, opt_state, batch, cfg: PPOConfig, optimizer):
+    """One epoch of minibatched PPO on a flat (N, ...) batch."""
+    n = batch["obs"].shape[0]
+    mb = n // cfg.minibatches
+    perm_batch = jax.tree.map(lambda x: x[:mb * cfg.minibatches], batch)
+
+    def mb_step(carry, idx):
+        params, opt_state = carry
+        sl = jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, idx * mb, mb), perm_batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            mlp_ppo_loss, has_aux=True)(params, sl, cfg)
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics["grad_norm"] = gnorm
+        return (params, opt_state), metrics
+
+    (params, opt_state), metrics = jax.lax.scan(
+        mb_step, (params, opt_state), jnp.arange(cfg.minibatches))
+    return params, opt_state, jax.tree.map(jnp.mean, metrics)
+
+
+def make_mlp_learner(optimizer, cfg: PPOConfig):
+    """jit-ready multi-epoch PPO update from a trajectory batch."""
+
+    def learn(params, opt_state, traj: Dict[str, jnp.ndarray]):
+        # traj arrays: (T, B, ...) time-major from the sampler
+        adv, ret = gae_mod.gae(traj["rewards"], traj["values"],
+                               traj["dones"], traj["last_value"],
+                               cfg.gamma, cfg.lam)
+        batch = {
+            "obs": traj["obs"],
+            "actions": traj["actions"],
+            "behavior_logp": traj["logp"],
+            "advantages": gae_mod.normalize(adv),
+            "returns": ret,
+        }
+        flat = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), batch)
+
+        def epoch(carry, _):
+            params, opt_state = carry
+            params, opt_state, metrics = mlp_ppo_update(
+                params, opt_state, flat, cfg, optimizer)
+            return (params, opt_state), metrics
+
+        (params, opt_state), metrics = jax.lax.scan(
+            epoch, (params, opt_state), None, length=cfg.epochs)
+        return params, opt_state, jax.tree.map(jnp.mean, metrics)
+
+    return learn
+
+
+# ======================================================== LM (token) PPO
+def lm_ppo_loss(model_cfg, params, batch: Dict[str, jnp.ndarray],
+                cfg: PPOConfig, *, impl: str = "reference",
+                remat: str = "full"):
+    """Token-level PPO loss for a sequence-model policy.
+
+    batch: tokens (B,S) int32 — input context; targets (B,S) — actions
+    (next tokens); behavior_logp, advantages, returns, mask (B,S) f32.
+    This is the exact computation ``train_4k`` lowers in the dry-run.
+    """
+    h, aux = transformer.forward(
+        model_cfg, params, batch["tokens"],
+        extra_embeds=batch.get("extra_embeds"),
+        positions=batch.get("positions"), impl=impl, remat=remat)
+    S = batch["targets"].shape[1]
+    h = h[:, -S:]                                   # drop prefix positions
+    logp, ent = transformer.token_logp_entropy(model_cfg, params, h,
+                                               batch["targets"])
+    v = transformer.value(model_cfg, params, h)
+    mask = batch["mask"]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    pg = jnp.sum(clipped_surrogate(logp, batch["behavior_logp"],
+                                   batch["advantages"], cfg.clip_eps)
+                 * mask) / denom
+    v_loss = 0.5 * jnp.sum((v - batch["returns"]) ** 2 * mask) / denom
+    ent_mean = jnp.sum(ent * mask) / denom
+    loss = (pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent_mean
+            + cfg.aux_coef * aux)
+    metrics = {"loss": loss, "pg_loss": pg, "v_loss": v_loss,
+               "entropy": ent_mean, "aux": aux}
+    return loss, metrics
+
+
+def make_lm_train_step(model_cfg, optimizer, cfg: PPOConfig,
+                       impl: str = "reference", remat: str = "full"):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_ppo_loss(model_cfg, p, batch, cfg, impl=impl,
+                                  remat=remat), has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,180 @@
+"""Trust-Region Policy Optimization (natural gradient + line search).
+
+The paper's Related Work contrasts WALL-E with Frans & Hafner's parallel
+TRPO; implementing TRPO alongside PPO lets the framework reproduce that
+comparison under the same parallel-sampler runtime (both learners consume
+identical trajectory batches).
+
+Natural gradient via conjugate-gradient on Fisher-vector products
+(Hessian-of-KL vp, computed with jvp-of-grad), then a backtracking line
+search enforcing the KL trust region.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos import gae as gae_mod
+from repro.models import mlp_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class TRPOConfig:
+    max_kl: float = 0.01
+    cg_iters: int = 10
+    cg_damping: float = 0.1
+    backtrack_coef: float = 0.8
+    backtrack_iters: int = 10
+    gamma: float = 0.99
+    lam: float = 0.95
+    vf_lr: float = 1e-3
+    vf_steps: int = 25
+
+
+# ----------------------------------------------------------- flat helpers
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    return flat, (treedef, [l.shape for l in leaves], sizes)
+
+
+def _unflatten(flat, meta):
+    treedef, shapes, sizes = meta
+    out, i = [], 0
+    for shape, size in zip(shapes, sizes):
+        out.append(flat[i:i + size].reshape(shape))
+        i += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------------- objective
+def surrogate(pi_params, batch) -> jnp.ndarray:
+    logp = mlp_policy.gaussian_logp(
+        *_dist(pi_params, batch["obs"]), batch["actions"])
+    ratio = jnp.exp(logp - batch["behavior_logp"])
+    return jnp.mean(ratio * batch["advantages"])
+
+
+def _dist(pi_params, obs):
+    mean = mlp_policy.mlp_apply(pi_params["pi"], obs)
+    std = jnp.exp(pi_params["log_std"])
+    return mean, jnp.broadcast_to(std, mean.shape)
+
+
+def mean_kl(pi_params, old_mean, old_std, obs) -> jnp.ndarray:
+    """KL(old || new) for diagonal Gaussians, averaged over the batch."""
+    mean, std = _dist(pi_params, obs)
+    kl = (jnp.log(std / old_std)
+          + (old_std ** 2 + (old_mean - mean) ** 2) / (2 * std ** 2) - 0.5)
+    return jnp.mean(jnp.sum(kl, axis=-1))
+
+
+def fisher_vp(pi_params, obs, old_mean, old_std, vec, meta, damping):
+    """(H_KL + damping I) @ vec via jvp of grad (Pearlmutter trick)."""
+
+    def kl_flat(flat):
+        return mean_kl(_unflatten(flat, meta), old_mean, old_std, obs)
+
+    flat0, _ = _flatten(pi_params)
+    g = jax.grad(kl_flat)
+    _, hvp = jax.jvp(g, (flat0,), (vec,))
+    return hvp + damping * vec
+
+
+def conjugate_gradient(avp, b, iters: int) -> jnp.ndarray:
+    x = jnp.zeros_like(b)
+    r = b
+    p = b
+    rs = jnp.dot(r, r)
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        ap = avp(p)
+        alpha = rs / (jnp.dot(p, ap) + 1e-10)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        p = r + (rs_new / (rs + 1e-10)) * p
+        return (x, r, p, rs_new), None
+
+    (x, _, _, _), _ = jax.lax.scan(body, (x, r, p, rs), None, length=iters)
+    return x
+
+
+# ----------------------------------------------------------------- update
+def trpo_update(params: Dict, batch: Dict, cfg: TRPOConfig
+                ) -> Tuple[Dict, Dict]:
+    """One TRPO policy step (+ vf regression). batch: flat (N, ...) arrays
+    with obs/actions/behavior_logp/advantages/returns."""
+    pi_params = {"pi": params["pi"], "log_std": params["log_std"]}
+    old_mean, old_std = _dist(pi_params, batch["obs"])
+    old_mean = jax.lax.stop_gradient(old_mean)
+    old_std = jax.lax.stop_gradient(old_std)
+
+    flat0, meta = _flatten(pi_params)
+    g_tree = jax.grad(surrogate)(pi_params, batch)
+    g, _ = _flatten(g_tree)
+
+    avp = lambda v: fisher_vp(pi_params, batch["obs"], old_mean, old_std,
+                              v, meta, cfg.cg_damping)
+    step_dir = conjugate_gradient(avp, g, cfg.cg_iters)
+    shs = jnp.dot(step_dir, avp(step_dir))
+    step_scale = jnp.sqrt(2 * cfg.max_kl / jnp.maximum(shs, 1e-10))
+    full_step = step_scale * step_dir
+    base_surr = surrogate(pi_params, batch)
+
+    def try_step(coef):
+        cand = _unflatten(flat0 + coef * full_step, meta)
+        return (surrogate(cand, batch),
+                mean_kl(cand, old_mean, old_std, batch["obs"]))
+
+    # backtracking line search (host loop is fine: <= 10 small evals)
+    coef = 1.0
+    accepted = 0.0
+    for _ in range(cfg.backtrack_iters):
+        surr, kl = try_step(coef)
+        if bool(surr > base_surr) and bool(kl <= 1.5 * cfg.max_kl):
+            accepted = coef
+            break
+        coef *= cfg.backtrack_coef
+    new_pi = _unflatten(flat0 + accepted * full_step, meta)
+
+    # value-function regression (simple Adam-free GD for self-containment)
+    vf = params["vf"]
+    for _ in range(cfg.vf_steps):
+        vg = jax.grad(
+            lambda v: jnp.mean((mlp_policy.mlp_apply(v, batch["obs"])[..., 0]
+                                - batch["returns"]) ** 2))(vf)
+        vf = jax.tree.map(lambda p, g: p - cfg.vf_lr * g, vf, vg)
+
+    new_params = {"pi": new_pi["pi"], "log_std": new_pi["log_std"],
+                  "vf": vf}
+    surr, kl = try_step(accepted)
+    metrics = {"surrogate_gain": surr - base_surr, "kl": kl,
+               "step_coef": accepted}
+    return new_params, metrics
+
+
+def make_trpo_learner(cfg: TRPOConfig):
+    """Same interface as ppo.make_mlp_learner: consumes (T,B,...) trajs."""
+
+    def learn(params, opt_state, traj):
+        adv, ret = gae_mod.gae(traj["rewards"], traj["values"],
+                               traj["dones"], traj["last_value"],
+                               cfg.gamma, cfg.lam)
+        batch = {
+            "obs": traj["obs"].reshape((-1,) + traj["obs"].shape[2:]),
+            "actions": traj["actions"].reshape(
+                (-1,) + traj["actions"].shape[2:]),
+            "behavior_logp": traj["logp"].reshape(-1),
+            "advantages": gae_mod.normalize(adv).reshape(-1),
+            "returns": ret.reshape(-1),
+        }
+        params, metrics = trpo_update(params, batch, cfg)
+        return params, opt_state, metrics
+
+    return learn

@@ -1,0 +1,6 @@
+from repro.checkpoint.io import (  # noqa: F401
+    latest_step,
+    load_metadata,
+    restore,
+    save,
+)

@@ -1,0 +1,99 @@
+"""Pytree checkpointing: flattened-path .npz + json metadata, keep-last-k.
+
+No orbax dependency; restore takes a template pytree (from ``init_params``)
+so structure and dtypes are authoritative.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(directory: str, step: int, tree: Any,
+         metadata: Optional[Dict] = None, keep: int = 3) -> str:
+    """Write ``<dir>/ckpt_<step>/arrays.npz`` (+meta.json); prune old."""
+    path = os.path.join(directory, f"ckpt_{step:010d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(metadata or {})}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _prune(directory, keep)
+    return path
+
+
+def _ckpt_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = _ckpt_steps(directory)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"ckpt_{s:010d}"),
+                      ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _ckpt_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None
+            ) -> Any:
+    """Load arrays into the structure of ``template`` (dtypes preserved)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"ckpt_{step:010d}", "arrays.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(_part(x) for x in p)
+        arr = data[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(directory: str, step: Optional[int] = None) -> Dict:
+    if step is None:
+        step = latest_step(directory)
+    with open(os.path.join(directory, f"ckpt_{step:010d}", "meta.json")) as f:
+        return json.load(f)

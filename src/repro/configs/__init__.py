@@ -1,0 +1,48 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    supports_shape,
+)
+
+_ARCH_MODULES = {
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "llama3-405b": "llama3_405b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "musicgen-medium": "musicgen_medium",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "hymba-1.5b": "hymba_1_5b",
+    "walle-mlp": "walle_mlp",
+}
+
+ASSIGNED_ARCHS = [a for a in _ARCH_MODULES if a != "walle-mlp"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-reduced"):
+        return get_config(arch_id[: -len("-reduced")]).reduced()
+    try:
+        mod = importlib.import_module(
+            f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; choose from {sorted(_ARCH_MODULES)}")
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in _ARCH_MODULES}

@@ -1,0 +1,16 @@
+"""walle-mlp — the paper's own policy model.
+
+WALL-E's experiments (MuJoCo HalfCheetah-v2, PPO) use a small Gaussian-MLP
+policy + value network. This config drives the paper-faithful reproduction
+(benchmarks/fig3..fig7) and examples/quickstart.py.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="walle-mlp",
+    family="mlp",
+    n_layers=2,          # hidden layers
+    d_model=64,          # hidden width
+    vocab_size=0,
+    source="WALL-E (2019) §4: PPO Gaussian-MLP policy on HalfCheetah-v2",
+)

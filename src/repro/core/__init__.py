@@ -1,0 +1,13 @@
+# The paper's primary contribution: WALL-E's parallel-sampler architecture
+# (N rollout samplers + async agent/learner + policy & experience queues).
+from repro.core import orchestrator, queues, sampler, timing  # noqa: F401
+from repro.core.orchestrator import (  # noqa: F401
+    AsyncOrchestrator,
+    IterationLog,
+    SyncRunner,
+)
+from repro.core.queues import (  # noqa: F401
+    Experience,
+    ExperienceQueue,
+    PolicyStore,
+)

@@ -1,0 +1,195 @@
+"""WALL-E's agent processor: synchronous baseline + asynchronous runtime.
+
+* ``SyncRunner`` — the N=1 architecture of the paper's comparison (also
+  runs N logical samplers back-to-back so per-sampler critical-path time
+  can be measured on a single host; see DESIGN.md §2 on measurement).
+* ``AsyncOrchestrator`` — the paper's architecture: N sampler threads
+  generating experience with the freshest published policy (possibly
+  stale), a learner thread consuming the experience queue and publishing
+  new parameters to the policy store. Device work stays jitted; threads
+  orchestrate, matching the paper's process roles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.queues import Experience, ExperienceQueue, PolicyStore
+from repro.core.timing import PhaseTimer
+from repro.data import trajectory
+
+
+@dataclasses.dataclass
+class IterationLog:
+    iteration: int
+    collect_time: float          # critical-path (parallel) collection time
+    collect_time_serial: float   # sum over samplers (1-process equivalent)
+    learn_time: float
+    mean_return: float
+    samples: int
+    staleness: float = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ================================================================== sync
+class SyncRunner:
+    """Collect (N samplers, serially timed) -> learn -> repeat.
+
+    With ``num_samplers=1`` this is exactly the paper's baseline. With
+    N > 1 it executes each sampler's work back-to-back, recording each
+    sampler's wall time; ``collect_time`` reports the max (the critical
+    path a truly parallel deployment would see) and
+    ``collect_time_serial`` the sum (what N=1 pays for the same samples).
+    """
+
+    def __init__(self, rollout: Callable, learn: Callable,
+                 params: Any, opt_state: Any, carries: List[Any],
+                 num_samplers: int):
+        assert len(carries) == num_samplers
+        self.rollout = jax.jit(rollout)
+        self.learn = jax.jit(learn)
+        self.params = params
+        self.opt_state = opt_state
+        self.carries = carries
+        self.num_samplers = num_samplers
+        self.timer = PhaseTimer()
+        self.logs: List[IterationLog] = []
+
+    def run(self, iterations: int) -> List[IterationLog]:
+        for it in range(iterations):
+            per_sampler: List[float] = []
+            trajs = []
+            for i in range(self.num_samplers):
+                t0 = time.perf_counter()
+                self.carries[i], traj = self.rollout(self.params,
+                                                     self.carries[i])
+                traj = jax.block_until_ready(traj)
+                per_sampler.append(time.perf_counter() - t0)
+                trajs.append(traj)
+            merged = trajectory.merge(trajs) if len(trajs) > 1 else trajs[0]
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.learn(
+                self.params, self.opt_state, merged)
+            jax.block_until_ready(self.params)
+            learn_time = time.perf_counter() - t0
+            ret = float(trajectory.episode_returns(merged))
+            log = IterationLog(
+                iteration=it,
+                collect_time=max(per_sampler),
+                collect_time_serial=sum(per_sampler),
+                learn_time=learn_time,
+                mean_return=ret,
+                samples=trajectory.num_samples(merged),
+            )
+            self.logs.append(log)
+            self.timer.add("collect", log.collect_time)
+            self.timer.add("learn", learn_time)
+        return self.logs
+
+
+# ================================================================= async
+class AsyncOrchestrator:
+    """The paper's architecture (Fig 2): N sampler threads + learner thread.
+
+    Sampler i loop:  params <- PolicyStore (latest, maybe stale)
+                     traj   <- jitted rollout
+                     ExperienceQueue.put(traj, version)
+    Learner loop:    drain >= min_batches experiences
+                     params <- jitted PPO update
+                     PolicyStore.publish(params)
+    """
+
+    def __init__(self, rollout: Callable, learn: Callable,
+                 params: Any, opt_state: Any, carries: List[Any],
+                 num_samplers: int, min_batches_per_update: int = 1,
+                 queue_size: int = 64):
+        self.rollout = jax.jit(rollout)
+        self.learn = jax.jit(learn)
+        self.store = PolicyStore(params)
+        self.expq = ExperienceQueue(maxsize=queue_size)
+        self.opt_state = opt_state
+        self.carries = carries
+        self.num_samplers = num_samplers
+        self.min_batches = min_batches_per_update
+        self.timer = PhaseTimer()
+        self.logs: List[IterationLog] = []
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------ threads
+    def _sampler_loop(self, i: int) -> None:
+        while not self._stop.is_set():
+            params, version = self.store.read()
+            t0 = time.perf_counter()
+            self.carries[i], traj = self.rollout(params, self.carries[i])
+            traj = jax.block_until_ready(traj)
+            dt = time.perf_counter() - t0
+            try:
+                self.expq.put(Experience(traj, version, i, dt), timeout=5.0)
+            except Exception:
+                if self._stop.is_set():
+                    return
+
+    def _learner_loop(self, updates: int) -> None:
+        import queue as _q
+        for it in range(updates):
+            exps: List[Experience] = []
+            t_wait0 = time.perf_counter()
+            while len(exps) < self.min_batches and not self._stop.is_set():
+                try:
+                    exps.append(self.expq.get(self.store.version,
+                                              timeout=1.0))
+                except _q.Empty:
+                    continue
+            if self._stop.is_set() and not exps:
+                return
+            wait = time.perf_counter() - t_wait0
+            trajs = [e.traj for e in exps]
+            merged = (trajectory.merge(trajs) if len(trajs) > 1
+                      else trajs[0])
+            t0 = time.perf_counter()
+            params, _ = self.store.read()
+            params, self.opt_state, metrics = self.learn(
+                params, self.opt_state, merged)
+            jax.block_until_ready(params)
+            learn_time = time.perf_counter() - t0
+            self.store.publish(params)
+            collect = max(e.collect_seconds for e in exps)
+            log = IterationLog(
+                iteration=it,
+                collect_time=collect,
+                collect_time_serial=sum(e.collect_seconds for e in exps),
+                learn_time=learn_time,
+                mean_return=float(trajectory.episode_returns(merged)),
+                samples=sum(trajectory.num_samples(t) for t in trajs),
+                staleness=self.expq.mean_staleness(),
+            )
+            self.logs.append(log)
+            self.timer.add("collect_wait", wait)
+            self.timer.add("learn", learn_time)
+
+    # ---------------------------------------------------------------- run
+    def run(self, updates: int, timeout: float = 600.0) -> List[IterationLog]:
+        samplers = [threading.Thread(target=self._sampler_loop, args=(i,),
+                                     daemon=True)
+                    for i in range(self.num_samplers)]
+        learner = threading.Thread(target=self._learner_loop,
+                                   args=(updates,), daemon=True)
+        for t in samplers:
+            t.start()
+        learner.start()
+        learner.join(timeout=timeout)
+        self._stop.set()
+        for t in samplers:
+            t.join(timeout=5.0)
+        return self.logs
+
+    @property
+    def params(self):
+        return self.store.read()[0]

@@ -1,0 +1,92 @@
+"""WALL-E's two queues, host-side.
+
+* ``PolicyStore`` — the *policy queue*, implemented as a versioned
+  latest-wins cell ("primed": samplers always read the freshest params and
+  may therefore act with a stale policy; staleness is version-tracked).
+* ``ExperienceQueue`` — bounded FIFO carrying ``Experience`` records
+  (trajectory + the policy version that generated it + timing metadata)
+  from samplers to the learner.
+
+On a TPU mesh the queues dissolve into collectives (DESIGN.md §2); these
+classes exist for the paper-faithful async runtime and its measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+
+class PolicyStore:
+    """Versioned latest-wins parameter cell (the 'primed' policy queue)."""
+
+    def __init__(self, params: Any, version: int = 0):
+        self._lock = threading.Lock()
+        self._params = params
+        self._version = version
+        self.publish_count = 0
+
+    def publish(self, params: Any) -> int:
+        with self._lock:
+            self._params = params
+            self._version += 1
+            self.publish_count += 1
+            return self._version
+
+    def read(self) -> Tuple[Any, int]:
+        with self._lock:
+            return self._params, self._version
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+
+@dataclasses.dataclass
+class Experience:
+    traj: Any                 # dict of (T, B, ...) arrays
+    policy_version: int       # version the sampler acted with
+    sampler_id: int
+    collect_seconds: float    # sampler-side wall time for this rollout
+    enqueue_time: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+class ExperienceQueue:
+    """Bounded FIFO with staleness accounting."""
+
+    def __init__(self, maxsize: int = 64):
+        self._q: "queue.Queue[Experience]" = queue.Queue(maxsize=maxsize)
+        self.put_count = 0
+        self.staleness: List[int] = []
+        self.queue_wait: List[float] = []
+
+    def put(self, exp: Experience, timeout: Optional[float] = None) -> None:
+        self._q.put(exp, timeout=timeout)
+        self.put_count += 1
+
+    def get(self, learner_version: int, timeout: Optional[float] = None
+            ) -> Experience:
+        exp = self._q.get(timeout=timeout)
+        self.staleness.append(learner_version - exp.policy_version)
+        self.queue_wait.append(time.perf_counter() - exp.enqueue_time)
+        return exp
+
+    def drain(self, learner_version: int, max_items: int) -> List[Experience]:
+        """Non-blocking drain of up to ``max_items`` queued experiences."""
+        items = []
+        while len(items) < max_items:
+            try:
+                items.append(self.get(learner_version, timeout=0.0))
+            except queue.Empty:
+                break
+        return items
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+    def mean_staleness(self) -> float:
+        return (sum(self.staleness) / len(self.staleness)
+                if self.staleness else 0.0)

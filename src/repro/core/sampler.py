@@ -1,0 +1,146 @@
+"""Rollout samplers — WALL-E's N parallel sampler processors, JAX-native.
+
+Three granularities of "parallel sampler":
+
+* ``make_env_rollout`` — one sampler: a ``vmap``-batched environment swept
+  ``T`` steps with ``lax.scan`` under the current policy. This is the unit
+  of work one WALL-E sampler process performs per iteration.
+* ``make_sharded_rollout`` — the TPU-native form: ``shard_map`` places one
+  sampler per ``data``-axis mesh slice; trajectories are *born sharded* and
+  the learner consumes them in place (the experience queue becomes zero
+  movement; see DESIGN.md §2).
+* ``make_lm_rollout`` — the sequence-model sampler: autoregressive decode
+  against a synthetic reward model (``envs.lm_env``), i.e. the RLHF-style
+  workload whose inner step ``decode_32k``/``long_500k`` lower.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, auto_reset
+from repro.models import mlp_policy, transformer
+
+
+# ============================================================ env sampler
+def batched_reset(env: Env, key, batch: int):
+    states, obs = jax.vmap(env.reset)(jax.random.split(key, batch))
+    return states, obs
+
+
+def make_env_rollout(env: Env, horizon: int) -> Callable:
+    """Build ``rollout(params, carry, step_keys) -> (carry', traj)``.
+
+    carry = (env_state pytree (B,...), obs (B,obs_dim), keys (B,) PRNG).
+    traj arrays are time-major ``(T, B, ...)``; includes ``last_value``.
+    Pure and jit/shard_map-compatible.
+    """
+    step_fn = auto_reset(env)
+
+    def rollout(params, carry, _unused=None):
+        def body(carry, _):
+            env_state, obs, keys = carry
+            splits = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+            keys2, ka, ke = splits[:, 0], splits[:, 1], splits[:, 2]
+            actions, logp = jax.vmap(
+                mlp_policy.sample_action, in_axes=(None, 0, 0))(
+                    params, obs, ka)
+            values = mlp_policy.value_apply(params, obs)
+            env_state2, obs2, rewards, dones = jax.vmap(step_fn)(
+                env_state, actions, ke)
+            out = {"obs": obs, "actions": actions, "rewards": rewards,
+                   "dones": dones, "logp": logp, "values": values}
+            return (env_state2, obs2, keys2), out
+
+        carry, traj = jax.lax.scan(body, carry, None, length=horizon)
+        traj["last_value"] = mlp_policy.value_apply(params, carry[1])
+        return carry, traj
+
+    return rollout
+
+
+def init_env_carry(env: Env, key, batch: int):
+    k_reset, k_keys = jax.random.split(key)
+    states, obs = batched_reset(env, k_reset, batch)
+    keys = jax.random.split(k_keys, batch)
+    return (states, obs, keys)
+
+
+# ====================================================== sharded (TPU) form
+def make_sharded_rollout(env: Env, horizon: int, mesh,
+                         data_axes=("data",)) -> Callable:
+    """One WALL-E sampler per ``data``-axis slice via shard_map.
+
+    Params are replicated (the policy broadcast = the paper's policy queue);
+    env state / trajectories are sharded on the batch axis and never leave
+    their shard — the learner's pjit consumes them with identical sharding.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    rollout = make_env_rollout(env, horizon)
+    batch_spec = P(data_axes)                      # leading dim = env batch
+    carry_spec = (batch_spec, batch_spec, batch_spec)
+    # trajectory arrays are time-major (T, B, ...): batch is dim 1
+    traj_spec = {k: P(None, data_axes)
+                 for k in ("obs", "actions", "rewards", "dones", "logp",
+                           "values")}
+    traj_spec["last_value"] = batch_spec
+
+    sharded = jax.shard_map(
+        lambda p, c: rollout(p, c),
+        mesh=mesh,
+        in_specs=(P(), carry_spec),
+        out_specs=(carry_spec, traj_spec),
+        check_vma=False,
+    )
+    return sharded
+
+
+# ============================================================== LM sampler
+def make_lm_rollout(cfg, lmenv, gen_len: int) -> Callable:
+    """Sequence-policy sampler: prefill the prompt, then decode ``gen_len``
+    tokens (the experience-collection inner loop), scoring with the token
+    reward model. Returns time-major traj compatible with the PPO learner.
+    """
+
+    def rollout(params, prompt: jnp.ndarray, key) -> Dict[str, jnp.ndarray]:
+        B, P = prompt.shape
+        state, logits = transformer.prefill(cfg, params, prompt,
+                                            gen_budget=gen_len)
+
+        def body(carry, key_t):
+            state, logits = carry
+            tok = jax.random.categorical(key_t, logits)          # (B,)
+            logp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                       tok[:, None], axis=-1)[:, 0]
+            state, logits2 = transformer.decode_step(cfg, params, state,
+                                                     tok[:, None])
+            return (state, logits2), (tok, logp)
+
+        keys = jax.random.split(key, gen_len)
+        (state, _), (tokens, logps) = jax.lax.scan(body, (state, logits),
+                                                   keys)
+        tokens = tokens.T                                       # (B, T)
+        logps = logps.T
+        rewards = lmenv.token_rewards(tokens)
+        return {
+            "tokens": tokens, "logp": logps, "rewards": rewards,
+            "prompt": prompt,
+        }
+
+    return rollout
+
+
+# ===================================================== sample-count helper
+def samples_per_rollout(batch: int, horizon: int) -> int:
+    return batch * horizon
+
+
+def split_batch(global_batch: int, num_samplers: int) -> int:
+    """Per-sampler env batch (the paper divides 20000 samples across N)."""
+    assert global_batch % num_samplers == 0, (
+        f"global batch {global_batch} not divisible by N={num_samplers}")
+    return global_batch // num_samplers

@@ -1,0 +1,132 @@
+"""Batched token serving with a request queue — WALL-E's queues, serving
+edition.
+
+The same decoupling the paper applies to RL experience collection applies
+to inference: a bounded **request queue** feeds a fixed-width slot batch;
+the jitted decode step advances all slots together; a slot that hits EOS
+stops emitting (its tail steps are wasted work, counted in the stats).
+
+Scheduling is **wave-based**: a new wave of requests is admitted when the
+current wave finishes. Per-slot continuous refill needs per-slot cache
+positions (each sequence at a different depth); the decode state keeps one
+shared position counter, so that upgrade — forced-decoding prompt injection
+into a live batch — is noted as the next step in DESIGN.md §7 rather than
+half-implemented here. Fixed shapes mean request churn never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: Any                     # (prompt_len,) int32
+    max_new_tokens: int
+    enqueue_time: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    latency: float
+    queue_wait: float
+
+
+class SlotServer:
+    """Fixed-width, wave-scheduled batch server over ``decode_step``."""
+
+    def __init__(self, cfg, params, *, slots: int, prompt_len: int,
+                 max_new_tokens: int, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.prompt_len = prompt_len
+        self.budget = max_new_tokens
+        self.eos_id = eos_id
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.completions: List[Completion] = []
+        self.wasted_slot_steps = 0      # EOS'd slots riding out the wave
+        self.decode_steps = 0
+        self._key = jax.random.PRNGKey(seed)
+
+        def step(params, state, tokens, key):
+            state, logits = transformer.decode_step(cfg, params, state,
+                                                    tokens)
+            nxt = jax.random.categorical(key, logits)
+            return state, nxt
+
+        self._step = jax.jit(step)
+        self._prefill = jax.jit(
+            lambda params, toks: transformer.prefill(
+                cfg, params, toks, gen_budget=max_new_tokens))
+
+    def submit(self, req: Request) -> None:
+        assert req.prompt.shape == (self.prompt_len,), (
+            f"prompt must be left-padded to {self.prompt_len}")
+        self.queue.put(req)
+
+    # ------------------------------------------------------------- wave
+    def _run_wave(self, wave: List[Request]) -> None:
+        pad = self.slots - len(wave)
+        prompts = [r.prompt for r in wave] + [
+            jnp.zeros((self.prompt_len,), jnp.int32)] * pad
+        start = time.perf_counter()
+        state, logits = self._prefill(self.params, jnp.stack(prompts))
+        self._key, k = jax.random.split(self._key)
+        tokens = jax.random.categorical(k, logits)[:, None]
+
+        emitted: List[List[int]] = [[] for _ in wave]
+        done = [False] * len(wave)
+        budget = min(self.budget, max(r.max_new_tokens for r in wave))
+        for _ in range(budget):
+            host = [int(t) for t in tokens[:, 0]]
+            for i, req in enumerate(wave):
+                if done[i]:
+                    self.wasted_slot_steps += 1
+                    continue
+                emitted[i].append(host[i])
+                if (len(emitted[i]) >= req.max_new_tokens
+                        or (self.eos_id is not None
+                            and host[i] == self.eos_id)):
+                    done[i] = True
+            self.wasted_slot_steps += pad
+            if all(done):
+                break
+            self._key, k = jax.random.split(self._key)
+            state, nxt = self._step(self.params, state, tokens, k)
+            tokens = nxt[:, None]
+            self.decode_steps += 1
+        now = time.perf_counter()
+        for i, req in enumerate(wave):
+            self.completions.append(Completion(
+                request_id=req.request_id,
+                tokens=emitted[i],
+                latency=now - start,
+                queue_wait=start - req.enqueue_time,
+            ))
+
+    # -------------------------------------------------------------- run
+    def run(self) -> List[Completion]:
+        """Serve until the queue is drained."""
+        while True:
+            wave: List[Request] = []
+            while len(wave) < self.slots:
+                try:
+                    wave.append(self.queue.get_nowait())
+                except queue.Empty:
+                    break
+            if not wave:
+                break
+            self._run_wave(wave)
+        return self.completions

@@ -1,0 +1,39 @@
+"""Uniform replay buffer (ring, preallocated, jittable) — DDPG substrate."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayState(NamedTuple):
+    storage: Dict[str, jnp.ndarray]   # each (capacity, ...)
+    index: jnp.ndarray                # next write slot
+    size: jnp.ndarray                 # filled entries
+
+
+def init_replay(capacity: int, example: Dict[str, jnp.ndarray]) -> ReplayState:
+    storage = {k: jnp.zeros((capacity,) + v.shape[1:], v.dtype)
+               for k, v in example.items()}
+    return ReplayState(storage, jnp.zeros((), jnp.int32),
+                       jnp.zeros((), jnp.int32))
+
+
+def add_batch(state: ReplayState, batch: Dict[str, jnp.ndarray]
+              ) -> ReplayState:
+    """Insert (N, ...) transitions at the ring head (wraps around)."""
+    cap = next(iter(state.storage.values())).shape[0]
+    n = next(iter(batch.values())).shape[0]
+    idx = (state.index + jnp.arange(n)) % cap
+    storage = {k: state.storage[k].at[idx].set(batch[k])
+               for k in state.storage}
+    return ReplayState(storage, (state.index + n) % cap,
+                       jnp.minimum(state.size + n, cap))
+
+
+def sample(state: ReplayState, key, batch_size: int
+           ) -> Dict[str, jnp.ndarray]:
+    idx = jax.random.randint(key, (batch_size,), 0,
+                             jnp.maximum(state.size, 1))
+    return {k: v[idx] for k, v in state.storage.items()}

@@ -1,0 +1,65 @@
+"""On-policy trajectory containers.
+
+A trajectory batch is a dict of time-major arrays ``(T, B, ...)`` produced
+by one sampler rollout — the unit that flows through WALL-E's experience
+queue. Helpers here merge/slice them for the learner.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+REQUIRED_KEYS = ("obs", "actions", "rewards", "dones", "logp", "values")
+
+
+def validate(traj: Dict[str, jnp.ndarray]) -> None:
+    for k in REQUIRED_KEYS:
+        if k not in traj:
+            raise KeyError(f"trajectory missing key {k!r}")
+    T, B = traj["rewards"].shape[:2]
+    for k in REQUIRED_KEYS:
+        if traj[k].shape[:2] != (T, B):
+            raise ValueError(
+                f"{k} has shape {traj[k].shape}, expected leading ({T},{B})")
+
+
+def merge(trajs: List[Dict[str, jnp.ndarray]]) -> Dict[str, jnp.ndarray]:
+    """Concatenate sampler outputs along the batch axis (queue drain)."""
+    out = {}
+    for k in trajs[0]:
+        axis = 0 if trajs[0][k].ndim == 0 else (
+            0 if k == "last_value" and trajs[0][k].ndim == 1 else 1)
+        if k == "last_value":
+            out[k] = jnp.concatenate([t[k] for t in trajs], axis=0)
+        else:
+            out[k] = jnp.concatenate([t[k] for t in trajs], axis=1)
+    return out
+
+
+def num_samples(traj: Dict[str, jnp.ndarray]) -> int:
+    T, B = traj["rewards"].shape[:2]
+    return T * B
+
+
+def episode_returns(traj: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Mean undiscounted return of episodes *completed* inside the batch."""
+    rew, dones = traj["rewards"], traj["dones"].astype(bool)
+
+    def per_env(r, d):
+        def step(carry, xs):
+            acc, total, count = carry
+            ri, di = xs
+            acc = acc + ri
+            total = jnp.where(di, total + acc, total)
+            count = jnp.where(di, count + 1, count)
+            acc = jnp.where(di, 0.0, acc)
+            return (acc, total, count), None
+
+        (acc, total, count), _ = jax.lax.scan(step, (0.0, 0.0, 0), (r, d))
+        return total, count
+
+    totals, counts = jax.vmap(per_env, in_axes=1)(rew, dones)
+    n = jnp.maximum(jnp.sum(counts), 1)
+    return jnp.sum(totals) / n

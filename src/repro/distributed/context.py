@@ -1,0 +1,114 @@
+"""Sharding-constraint context: logical-axis hints inside model code.
+
+The model is written mesh-agnostically; the launcher activates a
+``ShardingCtx`` and the model's ``constrain(x, ...logical axes...)`` calls
+become ``with_sharding_constraint`` (no-ops when no context is active, so
+smoke tests and single-device runs are untouched).
+
+Logical axes (the Megatron-TP + sequence-parallel layout, DESIGN.md §5):
+  batch  -> (pod, data)     one WALL-E sampler per data slice
+  seq    -> model           sequence-parallel residual stream
+  heads  -> model           flat q/k/v projection dim (always divisible)
+  dff    -> model           MLP hidden
+  dinner -> model           SSM channels
+  vocab  -> model           logits
+Every placement passes through the divisibility fallback (replicate, never
+pad).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+_ACTIVE: Optional["ShardingCtx"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    mode: str = "train"          # "train" (FSDP x TP) | "serve" (resident)
+
+    def axes_for(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return sh.batch_axes(self.mesh)
+        return ("model",)
+
+
+def get() -> Optional[ShardingCtx]:
+    return _ACTIVE
+
+
+def mode() -> str:
+    return _ACTIVE.mode if _ACTIVE is not None else "train"
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, mode: str = "train"):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = ShardingCtx(mesh, mode)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def constrain(x, *logical, keep_unspecified: bool = False):
+    """Apply a sharding constraint by logical dim names.
+
+    ``logical`` entries: axis name, None (= force-replicated), or "?"
+    (leave unconstrained — only meaningful with ``keep_unspecified``).
+    """
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = []
+    for size, name in zip(x.shape, logical):
+        if name is None or name == "?":
+            spec.append(None)
+            continue
+        spec.append(sh.shard_axes(size, ctx.axes_for(name), ctx.mesh))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def constrain_spec(x, spec: P):
+    """Raw PartitionSpec constraint (uneven sharding allowed — GSPMD pads).
+
+    Used for attention-head placement where head counts rarely divide the
+    model axis; padding waste beats 16x replication (DESIGN.md §5).
+    """
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def model_axis_size() -> int:
+    ctx = _ACTIVE
+    return ctx.mesh.shape["model"] if ctx is not None else 1
+
+
+def gather_weight(w, kind: str):
+    """Materialise a 2-D-sharded weight in its compute layout (fsdp dim
+    gathered) — in the *storage dtype*. Without this XLA-CPU converts bf16
+    weights to f32 and then all-gathers, doubling FSDP traffic
+    (EXPERIMENTS.md §Perf, llama3-405b train iteration 2). Train layout
+    only; serve layout contracts along the model axis and wants no gather.
+
+    kind: "col" (Din fsdp, Dout model) or "row" (Din model, Dout fsdp).
+    """
+    ctx = _ACTIVE
+    if ctx is None or ctx.mode != "train" or w.ndim != 2:
+        return w
+    spec = P(None, "model") if kind == "col" else P("model", None)
+    return jax.lax.with_sharding_constraint(w, NamedSharding(ctx.mesh, spec))

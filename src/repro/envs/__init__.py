@@ -1,0 +1,15 @@
+from repro.envs import cartpole, cheetah, lm_env, pendulum  # noqa: F401
+from repro.envs.base import Env, auto_reset  # noqa: F401
+
+_REGISTRY = {
+    "pendulum": pendulum.make,
+    "cartpole": cartpole.make,
+    "cheetah": cheetah.make,
+}
+
+
+def make(name: str) -> Env:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown env {name!r}; choose from {sorted(_REGISTRY)}")

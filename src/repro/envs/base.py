@@ -1,0 +1,45 @@
+"""Pure-JAX environment API.
+
+Environments are stateless pytree-in / pytree-out so they can be ``vmap``-ed
+into sampler batches and ``lax.scan``-ed into rollouts — the JAX-native
+equivalent of WALL-E's per-process environment copies. All functions operate
+on a *single* environment; batching is always applied from outside (vmap),
+so ``done`` is a scalar inside ``step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EnvState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """A bundle of pure functions describing one environment."""
+    name: str
+    obs_dim: int
+    act_dim: int
+    reset: Callable[[jax.Array], Tuple[EnvState, jnp.ndarray]]
+    step: Callable[[EnvState, jnp.ndarray, jax.Array],
+                   Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+    max_episode_steps: int = 1000
+
+
+def auto_reset(env: Env):
+    """Wrap ``env.step`` so ``done`` episodes restart transparently — the
+    sampler never stalls (WALL-E samplers run episodes back-to-back)."""
+
+    def step(state, action, key):
+        k_step, k_reset = jax.random.split(key)
+        next_state, obs, reward, done = env.step(state, action, k_step)
+        reset_state, reset_obs = env.reset(k_reset)
+        next_state = jax.tree.map(lambda r, n: jnp.where(done, r, n),
+                                  reset_state, next_state)
+        obs = jnp.where(done, reset_obs, obs)
+        return next_state, obs, reward, done
+
+    return step

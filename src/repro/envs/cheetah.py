@@ -1,0 +1,62 @@
+"""Planar "cheetah-like" locomotion, pure JAX.
+
+A 6-joint planar chain with damped torque-driven joint dynamics and a gait
+reward (forward velocity minus control cost), standing in for MuJoCo
+HalfCheetah-v2 — the paper's benchmark task — since MuJoCo binaries are
+unavailable here (DESIGN.md §2). Forward velocity arises from coordinated
+out-of-phase joint motion (adjacent-joint phase coupling), so the optimal
+policy must discover a gait, qualitatively like HalfCheetah.
+
+Observation (14-d): 6 joint angles, 6 joint velocities, body velocity, body
+pitch. Action: 6 joint torques in [-1, 1]. Reward: vx - 0.1 * ||a||^2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+
+N_JOINTS = 6
+DT = 0.05
+DAMPING = 1.5
+STIFFNESS = 4.0
+GEAR = 6.0
+COUPLING = 0.8
+
+
+def _obs(state):
+    th, om, vx, pitch, _ = state
+    return jnp.concatenate([th, om, jnp.stack([vx, pitch])])
+
+
+def _reset(key):
+    k1, k2 = jax.random.split(key)
+    th = jax.random.uniform(k1, (N_JOINTS,), minval=-0.1, maxval=0.1)
+    om = jax.random.uniform(k2, (N_JOINTS,), minval=-0.1, maxval=0.1)
+    state = (th, om, jnp.zeros(()), jnp.zeros(()), jnp.zeros((), jnp.int32))
+    return state, _obs(state)
+
+
+def _step(state, action, key):
+    del key
+    th, om, vx, pitch, t = state
+    a = jnp.clip(action, -1.0, 1.0)
+    # joint dynamics: torque-driven damped oscillators with neighbour coupling
+    neighbour = COUPLING * (jnp.roll(th, 1) - th)
+    om = om + DT * (GEAR * a - DAMPING * om - STIFFNESS * th + neighbour)
+    th = th + DT * om
+    # gait thrust: adjacent joints moving out of phase push the body forward
+    thrust = jnp.mean(jnp.sin(th[:-1] - th[1:]) * (om[:-1] - om[1:]))
+    vx = 0.9 * vx + DT * (8.0 * thrust)
+    pitch = 0.95 * pitch + 0.05 * jnp.mean(th)
+    t = t + 1
+    reward = vx - 0.1 * jnp.sum(a ** 2)
+    done = t >= 1000
+    state = (th, om, vx, pitch, t)
+    return state, _obs(state), reward, done
+
+
+def make() -> Env:
+    return Env(name="cheetah", obs_dim=2 * N_JOINTS + 2, act_dim=N_JOINTS,
+               reset=_reset, step=_step, max_episode_steps=1000)

@@ -1,0 +1,37 @@
+"""Token-generation environment — the RLHF-style instantiation of WALL-E.
+
+The "environment" for a sequence-model policy: the policy emits tokens
+autoregressively (experience collection = decode), and a fixed synthetic
+reward model scores them. The reward model is a random-but-fixed per-token
+preference table plus a repetition penalty — cheap, deterministic, and
+learnable, which is all the framework-level experiments need.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LMEnv:
+    vocab_size: int
+    episode_len: int
+    reward_table: jnp.ndarray        # (V,) fixed per-token reward
+    repeat_penalty: float = 0.5
+
+    def token_rewards(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """tokens (B, T) -> per-token rewards (B, T)."""
+        base = self.reward_table[tokens]
+        rep = jnp.concatenate(
+            [jnp.zeros_like(tokens[:, :1], dtype=bool),
+             tokens[:, 1:] == tokens[:, :-1]], axis=1)
+        return base - self.repeat_penalty * rep.astype(jnp.float32)
+
+
+def make(vocab_size: int, episode_len: int = 32, seed: int = 0) -> LMEnv:
+    key = jax.random.PRNGKey(seed)
+    table = 0.5 * jax.random.normal(key, (vocab_size,))
+    return LMEnv(vocab_size=vocab_size, episode_len=episode_len,
+                 reward_table=table)

@@ -1,0 +1,55 @@
+"""Pendulum swing-up (classic control), pure JAX.
+
+Dynamics and reward follow the canonical Gym Pendulum-v1; used as the fast
+CPU stand-in for the paper's MuJoCo task in tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+
+MAX_SPEED = 8.0
+MAX_TORQUE = 2.0
+DT = 0.05
+G = 10.0
+M = 1.0
+L = 1.0
+
+
+def _obs(state):
+    th, thdot, _ = state
+    return jnp.stack([jnp.cos(th), jnp.sin(th), thdot / MAX_SPEED])
+
+
+def _reset(key):
+    k1, k2 = jax.random.split(key)
+    th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+    thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+    state = (th, thdot, jnp.zeros((), jnp.int32))
+    return state, _obs(state)
+
+
+def _angle_norm(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+def _step(state, action, key):
+    del key
+    th, thdot, t = state
+    u = jnp.clip(action[0], -MAX_TORQUE, MAX_TORQUE)
+    cost = _angle_norm(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
+    thdot = thdot + (3 * G / (2 * L) * jnp.sin(th)
+                     + 3.0 / (M * L ** 2) * u) * DT
+    thdot = jnp.clip(thdot, -MAX_SPEED, MAX_SPEED)
+    th = th + thdot * DT
+    t = t + 1
+    state = (th, thdot, t)
+    done = t >= 200
+    return state, _obs(state), -cost, done
+
+
+def make() -> Env:
+    return Env(name="pendulum", obs_dim=3, act_dim=1,
+               reset=_reset, step=_step, max_episode_steps=200)

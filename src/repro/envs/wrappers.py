@@ -1,0 +1,54 @@
+"""Functional env wrappers: observation/reward normalization.
+
+State (running mean/var) is carried explicitly in the rollout carry so the
+wrappers stay pure and shard_map-able — each WALL-E sampler shard keeps its
+own statistics, and ``merge_norm_states`` combines them (Chan et al.
+parallel-variance) when the learner wants global normalization.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RunningNorm(NamedTuple):
+    mean: jnp.ndarray
+    var: jnp.ndarray
+    count: jnp.ndarray
+
+
+def init_norm(dim: int) -> RunningNorm:
+    return RunningNorm(jnp.zeros((dim,)), jnp.ones((dim,)),
+                       jnp.asarray(0.0))
+
+
+def update_norm(state: RunningNorm, batch: jnp.ndarray) -> RunningNorm:
+    """Welford batch update. batch (N, dim)."""
+    b_mean = jnp.mean(batch, axis=0)
+    b_var = jnp.var(batch, axis=0)
+    b_count = batch.shape[0]
+    delta = b_mean - state.mean
+    tot = state.count + b_count
+    mean = state.mean + delta * b_count / tot
+    m_a = state.var * state.count
+    m_b = b_var * b_count
+    m2 = m_a + m_b + delta ** 2 * state.count * b_count / tot
+    return RunningNorm(mean, m2 / tot, tot)
+
+
+def merge_norm_states(a: RunningNorm, b: RunningNorm) -> RunningNorm:
+    """Combine two shards' statistics (parallel variance)."""
+    delta = b.mean - a.mean
+    tot = a.count + b.count
+    mean = a.mean + delta * b.count / tot
+    m2 = a.var * a.count + b.var * b.count \
+        + delta ** 2 * a.count * b.count / tot
+    return RunningNorm(mean, m2 / tot, tot)
+
+
+def normalize_obs(state: RunningNorm, obs: jnp.ndarray,
+                  clip: float = 10.0) -> jnp.ndarray:
+    return jnp.clip((obs - state.mean) / jnp.sqrt(state.var + 1e-8),
+                    -clip, clip)

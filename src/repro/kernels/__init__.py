@@ -1,0 +1,9 @@
+# TPU Pallas kernels for the sampler's compute hot-spots (the experience-
+# collection half of WALL-E). Each subpackage: <name>.py (pallas_call +
+# BlockSpec VMEM tiling), ops.py (jit'd wrapper in model layout), ref.py
+# (pure-jnp oracle used by the allclose test sweeps).
+from repro.kernels import (  # noqa: F401
+    decode_attention,
+    flash_attention,
+    selective_scan,
+)

@@ -1,0 +1,7 @@
+from repro.kernels.decode_attention.decode_attention import (  # noqa: F401
+    decode_attention,
+)
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention_op,
+)
+from repro.kernels.decode_attention.ref import decode_ref  # noqa: F401

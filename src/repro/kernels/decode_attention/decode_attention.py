@@ -1,0 +1,97 @@
+"""Flash-decoding kernel for TPU (Pallas): one query row vs. a KV cache.
+
+The sampler's decode hot-spot (``decode_32k`` / ``long_500k``). The KV
+cache is streamed through VMEM in ``kv_block``-sized tiles along the
+sequential last grid axis, with the running (m, l, acc) for the single
+query row kept in VMEM scratch — a decode-specialised FlashAttention where
+the Q tile degenerates to one row per (batch, head) grid cell.
+
+Slot validity (ring-buffer caches may hold stale or unwritten slots) comes
+in as an int32 mask streamed with the same tiling as K/V.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, kv_block: int, num_kv_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    mask = valid_ref[0] > 0                             # (1, bk)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)                     # (1, bk)
+
+    m_prev = m_ref[...]                                 # (1, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid: jnp.ndarray, *, kv_block: int = 512,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,hd); k/v (B,K,Sc,hd); valid (Sc,) bool. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    _, K, Sc, _ = k.shape
+    assert H % K == 0
+    G = H // K
+    kv_block = min(kv_block, Sc)
+    assert Sc % kv_block == 0, (Sc, kv_block)
+    nk = Sc // kv_block
+    valid2 = valid.astype(jnp.int32).reshape(1, Sc)
+
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                               kv_block=kv_block, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b, h, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b, h, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, kv_block), lambda b, h, ik: (0, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q[:, :, None, :], k, v, valid2)
+    return out[:, :, 0, :]

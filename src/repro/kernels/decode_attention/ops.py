@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the decode-attention kernel (model layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("kv_block", "interpret"))
+def decode_attention_op(q: jnp.ndarray, k_cache: jnp.ndarray,
+                        v_cache: jnp.ndarray, valid: jnp.ndarray, *,
+                        kv_block: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Model layout: q (B,K,G,hd), cache (B,Sc,K,hd) -> (B,K,G,hd)."""
+    B, K, G, hd = q.shape
+    qh = q.reshape(B, K * G, hd)
+    kh = jnp.transpose(k_cache, (0, 2, 1, 3))
+    vh = jnp.transpose(v_cache, (0, 2, 1, 3))
+    o = decode_attention(qh, kh, vh, valid, kv_block=kv_block,
+                         interpret=interpret)
+    return o.reshape(B, K, G, hd)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode attention (mirrors models.attention.decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               valid: jnp.ndarray) -> jnp.ndarray:
+    """q (B,H,hd); k/v (B,K,Sc,hd); valid (Sc,). Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kr) / jnp.sqrt(
+        hd).astype(jnp.float32)
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vr).astype(q.dtype)

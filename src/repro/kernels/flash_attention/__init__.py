@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.flash_attention import (  # noqa: F401
+    flash_attention,
+)
+from repro.kernels.flash_attention.ops import flash_attention_op  # noqa: F401
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401

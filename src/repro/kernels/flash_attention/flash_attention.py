@@ -1,0 +1,132 @@
+"""FlashAttention-2-style prefill kernel for TPU (Pallas).
+
+The sampler's prefill hot-spot (``prefill_32k``). Streaming-softmax over KV
+blocks with running (m, l, acc) carried in VMEM scratch across the
+sequential last grid axis; GQA is handled in the BlockSpec index maps (the
+KV block for head ``h`` is head ``h // G`` — no repeated KV in HBM).
+
+Tiling: one (q_block x head_dim) Q tile and one (kv_block x head_dim) KV
+tile live in VMEM per grid step; defaults 128/512 keep the MXU matmul dims
+multiples of 128 (hardware-aligned) and the working set (~q*hd + 2*kv*hd +
+q*kv floats ~ 1.3 MB) comfortably inside ~16 MB VMEM with double buffering.
+
+Causal/SWA blocks that are fully masked are predicated off with ``pl.when``
+(no MXU work issued), so the kernel's FLOP count matches the exact
+lower-triangular / banded count.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int,
+            q_block: int, kv_block: int, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * q_block
+    k_start = ik * kv_block
+    # block-level predication: fully-masked blocks issue no MXU work
+    needed = jnp.bool_(True)
+    if causal:
+        needed = k_start <= q_start + q_block - 1
+    if window:
+        needed = needed & (k_start + kv_block - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (q_block, kv_block), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (q_block, kv_block), 1)
+        mask = jnp.ones((q_block, kv_block), jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe),
+                          0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot(p, v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 512,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,Sq,hd); k/v (B,K,Skv,hd) with H = K*G. Returns (B,H,Sq,hd).
+
+    ``interpret=True`` executes the kernel body on CPU for validation; on a
+    real TPU pass ``interpret=False`` (identical body).
+    """
+    B, H, Sq, hd = q.shape
+    _, K, Skv, _ = k.shape
+    assert H % K == 0, (H, K)
+    G = H // K
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0, (Sq, q_block, Skv,
+                                                       kv_block)
+    nq, nk = Sq // q_block, Skv // kv_block
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(hd), causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, hd), jnp.float32),   # acc
+            pltpu.VMEM((q_block, 1), jnp.float32),    # running max
+            pltpu.VMEM((q_block, 1), jnp.float32),    # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model's native layout (q (B,S,K,G,hd), kv (B,S,K,hd)) and
+handles layout transposition to the kernel's (B,H,S,hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "q_block",
+                                    "kv_block", "interpret"))
+def flash_attention_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                       causal: bool = True, window: int = 0,
+                       q_block: int = 128, kv_block: int = 512,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Model layout in/out: q (B,S,K,G,hd), k/v (B,S,K,hd) -> (B,S,K,G,hd)."""
+    B, S, K, G, hd = q.shape
+    qh = jnp.transpose(q.reshape(B, S, K * G, hd), (0, 2, 1, 3))
+    kh = jnp.transpose(k, (0, 2, 1, 3))
+    vh = jnp.transpose(v, (0, 2, 1, 3))
+    o = flash_attention(qh, kh, vh, causal=causal, window=window,
+                        q_block=q_block, kv_block=kv_block,
+                        interpret=interpret)
+    return jnp.transpose(o, (0, 2, 1, 3)).reshape(B, S, K, G, hd)

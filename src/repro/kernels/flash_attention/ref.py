@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive masked softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (B,H,Sq,hd); k/v (B,K,Skv,hd). Naive O(S^2) reference."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    Skv = k.shape[2]
+    rows = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (prefill: Sq=Skv)
+    cols = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= rows - cols < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

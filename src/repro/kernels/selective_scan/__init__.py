@@ -1,0 +1,4 @@
+from repro.kernels.selective_scan.ops import selective_scan  # noqa: F401
+from repro.kernels.selective_scan.ref import (  # noqa: F401
+    selective_scan_ref,
+)

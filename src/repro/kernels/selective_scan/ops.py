@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.selective_scan.selective_scan import (
+    selective_scan as _kernel_scan,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "t_chunk",
+                                             "interpret"))
+def selective_scan(dt, A, b, c, x, h0, *, d_block: int = 256,
+                   t_chunk: int = 128, interpret: bool = True):
+    return _kernel_scan(dt, A, b, c, x, h0, d_block=d_block,
+                        t_chunk=t_chunk, interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the selective scan: naive sequential recurrence."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt: jnp.ndarray, A: jnp.ndarray, b: jnp.ndarray,
+                       c: jnp.ndarray, x: jnp.ndarray, h0: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Step-by-step recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;
+    y_t = C_t . h_t. All f32. Shapes as kernels.selective_scan."""
+
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs                      # (B,Di),(B,N),(B,N),(B,Di)
+        abar = jnp.exp(dt_t[..., None] * A)           # (B,Di,N)
+        bx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = abar * h + bx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0)
+    h, ys = jax.lax.scan(step, h0, (tm(dt), tm(b), tm(c), tm(x)))
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,102 @@
+"""Selective-scan (Mamba1) kernel for TPU (Pallas).
+
+The SSM sampler hot-spot (falcon-mamba / hymba). Channels are tiled into
+``d_block``-wide lanes; time is cut into ``t_chunk`` chunks along the
+sequential last grid axis with the recurrent state ``h (d_block, N)``
+persisted in VMEM scratch across chunks — the TPU-native analogue of the
+CUDA kernel's register-resident state, re-thought for the HBM->VMEM->VREG
+hierarchy: each grid step streams one (t_chunk x d_block) tile of
+dt/x plus one (t_chunk x N) tile of B/C through VMEM and walks the chunk
+with an in-VMEM ``fori_loop``.
+
+Discretisation (Abar = exp(dt*A), Bx = dt*B*x) happens inside the kernel so
+the (S, D, N) tensor never exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, a_ref, b_ref, c_ref, x_ref, h0_ref, y_ref, hout_ref,
+            h_ref, *, t_chunk: int, num_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)      # (bd, N)
+
+    a = a_ref[...].astype(jnp.float32)                  # (bd, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)         # (bd,)
+        x_t = x_ref[0, t].astype(jnp.float32)           # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)           # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)           # (N,)
+        abar = jnp.exp(dt_t[:, None] * a)               # (bd, N)
+        bx = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = abar * h + bx
+        y_ref[0, t] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, t_chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ic == num_chunks - 1)
+    def _finalize():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan(dt: jnp.ndarray, A: jnp.ndarray, b: jnp.ndarray,
+                   c: jnp.ndarray, x: jnp.ndarray, h0: jnp.ndarray, *,
+                   d_block: int = 256, t_chunk: int = 128,
+                   interpret: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """dt/x (B,S,Di) f32, A (Di,N), b/c (B,S,N), h0 (B,Di,N).
+
+    Returns (y (B,S,Di) f32, h_final (B,Di,N) f32).
+    """
+    B, S, Di = x.shape
+    N = A.shape[-1]
+    d_block = min(d_block, Di)
+    t_chunk = min(t_chunk, S)
+    assert Di % d_block == 0 and S % t_chunk == 0, (Di, d_block, S, t_chunk)
+    nd, nc = Di // d_block, S // t_chunk
+
+    kernel = functools.partial(_kernel, t_chunk=t_chunk, num_chunks=nc)
+
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, t_chunk, d_block),
+                         lambda bi, di, ci: (bi, ci, di)),     # dt
+            pl.BlockSpec((d_block, N), lambda bi, di, ci: (di, 0)),  # A
+            pl.BlockSpec((1, t_chunk, N),
+                         lambda bi, di, ci: (bi, ci, 0)),      # B
+            pl.BlockSpec((1, t_chunk, N),
+                         lambda bi, di, ci: (bi, ci, 0)),      # C
+            pl.BlockSpec((1, t_chunk, d_block),
+                         lambda bi, di, ci: (bi, ci, di)),     # x
+            pl.BlockSpec((1, d_block, N),
+                         lambda bi, di, ci: (bi, di, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t_chunk, d_block),
+                         lambda bi, di, ci: (bi, ci, di)),     # y
+            pl.BlockSpec((1, d_block, N),
+                         lambda bi, di, ci: (bi, di, 0)),      # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Di), jnp.float32),
+            jax.ShapeDtypeStruct((B, Di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, A, b, c, x, h0)
+    return y, h_final

@@ -1,0 +1,4 @@
+# Launchers: mesh construction, multi-pod dry-run, training/serving drivers.
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and is
+# only meant to be run as a __main__ entry point.
+from repro.launch import mesh, specs  # noqa: F401

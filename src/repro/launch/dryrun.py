@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST precede any jax import (jax locks the device count
+at first init): they materialise 512 placeholder host devices so the
+production meshes (16x16 single-pod, 2x16x16 multi-pod) can be built.
+Nothing is ever allocated — inputs are ShapeDtypeStructs and the artifact
+is ``lowered.compile()``'s memory/cost analysis plus the collective
+schedule parsed from the partitioned HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos.ppo import PPOConfig, make_lm_train_step
+from repro.configs import INPUT_SHAPES, ASSIGNED_ARCHS, get_config, \
+    supports_shape
+from repro.distributed import context as dist_ctx
+from repro.distributed import sharding as sh
+from repro.launch import specs as specs_mod
+from repro.launch.hlo_analysis import collective_summary
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.optim import adam
+
+
+# ------------------------------------------------------------- lowering
+def build_step(cfg, shape, mesh, spec):
+    """Return (fn, args, in_shardings, out_shardings, donate, mode)."""
+    mode = "serve" if spec["kind"] == "decode" else "train"
+    pshapes = specs_mod.params_shapes(cfg)
+    pspecs = sh.param_specs(cfg, pshapes, mesh, mode)
+
+    if spec["kind"] == "train":
+        opt = adam(3e-4, moment_dtype=cfg.dtype)
+        step = make_lm_train_step(cfg, opt, PPOConfig())
+        opt_shapes = jax.eval_shape(opt.init, pshapes)
+        opt_specs = type(opt_shapes)(
+            jax.sharding.PartitionSpec(), pspecs, pspecs)
+        metrics_specs = {k: jax.sharding.PartitionSpec() for k in
+                         ("loss", "pg_loss", "v_loss", "entropy", "aux",
+                          "grad_norm")}
+        return (step,
+                (pshapes, opt_shapes) + spec["args"],
+                (pspecs, opt_specs) + spec["arg_specs"],
+                (pspecs, opt_specs, metrics_specs),
+                (0, 1), mode)
+
+    if spec["kind"] == "prefill":
+        n_extra = len(spec["args"])
+
+        def fn(params, *rest):
+            tokens = rest[0]
+            extra = rest[1] if cfg.frontend_embeds else None
+            positions = rest[-1] if cfg.m_rope_sections else None
+            return transformer.prefill(cfg, params, tokens, gen_budget=0,
+                                       positions=positions,
+                                       extra_embeds=extra)
+
+        return (fn, (pshapes,) + spec["args"],
+                (pspecs,) + spec["arg_specs"], spec["out_specs"], (), mode)
+
+    def fn(params, state, token):
+        return transformer.decode_step(cfg, params, state, token)
+
+    return (fn, (pshapes,) + spec["args"],
+            (pspecs,) + spec["arg_specs"], spec["out_specs"], (1,), mode)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = why
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = specs_mod.input_specs(cfg, shape, mesh)
+    fn, args, in_specs, out_specs, donate, mode = build_step(cfg, shape,
+                                                             mesh, spec)
+    in_sh = sh.to_shardings(mesh, in_specs)
+    out_sh = sh.to_shardings(mesh, out_specs)
+    with mesh, dist_ctx.use_mesh(mesh, mode):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_summary(hlo)
+    result.update({
+        "status": "ok",
+        "lower_seconds": round(t_lower, 1),
+        "compile_seconds": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            # NOTE: XLA-CPU temp_size sums allocations (reuse not deducted);
+            # treat as an upper bound on live temps
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "flops_per_device_unweighted": cost.get("flops", -1.0),
+        "bytes_accessed_per_device_unweighted": cost.get("bytes accessed",
+                                                         -1.0),
+        "dot_flops_per_device": coll.pop("dot_flops"),
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+    })
+    if verbose:
+        mm = result["memory"]
+        print(f"[{arch} x {shape_name} x {result['mesh']}] "
+              f"compile={t_compile:.0f}s "
+              f"args/dev={mm['argument_bytes']/2**30:.2f}GiB "
+              f"temp/dev={mm['temp_bytes']/2**30:.2f}GiB "
+              f"dotflops/dev={result['dot_flops_per_device']:.3e} "
+              f"coll/dev={coll['total_bytes']/2**30:.3f}GiB")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                combos.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in combos:
+        tag = f"{arch}_{shape}_{'mp' if mp else 'sp'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        try:
+            res = dryrun_one(arch, shape, multi_pod=mp)
+        except Exception as e:
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Collective-schedule extraction from partitioned HLO text.
+
+``cost_analysis`` gives FLOPs and HBM bytes but NOT collective traffic, so
+the roofline's third term is derived here: walk the HLO call graph from the
+entry computation, summing the moved bytes of every all-gather / all-reduce
+/ reduce-scatter / all-to-all / collective-permute — **multiplying by while-
+loop trip counts** (a collective inside the layer-scan body runs n_layers
+times; counting the static instruction once would undercount by ~100x for
+llama3-405b).
+
+Moved-bytes model per participating device (ring algorithms):
+  all-gather       (n-1)/n * result_bytes
+  all-reduce       2 (n-1)/n * bytes
+  reduce-scatter   (n-1) * result_bytes        (operand = n * result)
+  all-to-all       (n-1)/n * bytes
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# computation headers start at column 0 and end with '{':
+#   %region_0.66 (param: (s32[], ...)) -> (...) {     |  ENTRY %main.1 (...) {
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\-.]+)\s*\(.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|[a-z]\w*\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_WHILE_RE = re.compile(r"while\(.*condition=%?([\w\-.]+).*body=%?([\w\-.]+)",
+                       re.S)
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\-.]+)")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dot_flops(line: str, result_type: str, shapes: Dict) -> float:
+    """2 * result_elements * contracted_size for one dot instruction."""
+    m = _SHAPE_RE.findall(result_type)
+    if not m:
+        return 0.0
+    relems = 1
+    for d in m[0][1].split(","):
+        if d:
+            relems *= int(d)
+    lhs = _DOT_LHS.search(line)
+    cd = _DOT_CDIMS.search(line)
+    if not lhs or not cd:
+        return 0.0
+    lshape = shapes.get(lhs.group(1))
+    if lshape is None:
+        return 0.0
+    k = 1
+    for i in cd.group(1).split(","):
+        if i and int(i) < len(lshape):
+            k *= lshape[int(i)]
+    return 2.0 * relems * k
+
+
+def _moved_bytes(op: str, size: int, n: int) -> float:
+    n = max(n, 2)
+    if op == "all-gather":
+        return size * (n - 1) / n
+    if op == "all-reduce":
+        return 2 * size * (n - 1) / n
+    if op == "reduce-scatter":
+        return size * (n - 1)
+    if op == "all-to-all":
+        return size * (n - 1) / n
+    return float(size)          # collective-permute
+
+
+_DOT_LHS = re.compile(r"dot\(%?([\w\-.]+),")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_RESULT_NAME = re.compile(r"^(?:ROOT\s+)?%?([\w\-.]+)\s*=")
+
+
+class _Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.collectives: List[Tuple[str, float]] = []   # (op, moved bytes)
+        self.coll_counts: Dict[str, int] = defaultdict(int)
+        self.whiles: List[Tuple[str, str]] = []          # (cond, body)
+        self.calls: List[str] = []
+        self.max_const: int = 0
+        self.flops: float = 0.0
+        self.shapes: Dict[str, Tuple[int, ...]] = {}     # instr -> dims
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if raw and not raw[0].isspace():
+            hdr = _COMP_HDR.match(raw)
+            if hdr:
+                cur = _Comp(hdr.group(1))
+                comps[cur.name] = cur
+                if raw.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None or not line:
+            continue
+        m = _CONST_RE.search(line)
+        if m:
+            cur.max_const = max(cur.max_const, int(m.group(1)))
+        if " while(" in line or line.startswith("while("):
+            w = _WHILE_RE.search(line)
+            if w:
+                cur.whiles.append((w.group(1), w.group(2)))
+            continue
+        mi = _INSTR_RE.search(line)
+        if mi:
+            op = mi.group("op")
+            # record result shape for dot-FLOP lookups
+            nm = _RESULT_NAME.match(line)
+            if nm:
+                dims = _SHAPE_RE.findall(mi.group("type"))
+                if len(dims) == 1:
+                    ds = tuple(int(d) for d in dims[0][1].split(",") if d)
+                    cur.shapes[nm.group(1)] = ds
+            if op == "dot":
+                cur.flops += _dot_flops(line, mi.group("type"), cur.shapes)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL_OPS:
+                size = _bytes_of(mi.group("type"))
+                gi = _GROUPS_IOTA.search(line)
+                if gi:
+                    n = int(gi.group(2))
+                else:
+                    gl = _GROUPS_LIST.search(line)
+                    n = len(gl.group(1).split(",")) if gl else 2
+                is_f32 = mi.group("type").lstrip("(").startswith("f32")
+                cur.collectives.append((base, _moved_bytes(base, size, n),
+                                        is_f32))
+                cur.coll_counts[base] += 1
+                continue
+            if op in ("call", "conditional", "fusion"):
+                for callee in _CALL_RE.findall(line):
+                    cur.calls.append(callee)
+    return comps, entry
+
+
+def collective_summary(text: str) -> Dict:
+    """Per-device collective bytes + dot FLOPs, trip-count weighted."""
+    comps, entry = _parse_computations(text)
+    bytes_by_type: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    total = {"flops": 0.0, "f32_bytes": 0.0}
+    visiting = set()
+
+    def walk(name: str, mult: float) -> None:
+        comp = comps.get(name)
+        if comp is None or name in visiting:
+            return
+        visiting.add(name)
+        for op, moved, is_f32 in comp.collectives:
+            bytes_by_type[op] += moved * mult
+            if is_f32:
+                total["f32_bytes"] += moved * mult
+        for op, c in comp.coll_counts.items():
+            counts[op] += int(c * mult)
+        total["flops"] += comp.flops * mult
+        for cond, body in comp.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            trip = max(trip, 1)
+            walk(cond, mult)
+            walk(body, mult * trip)
+        for callee in comp.calls:
+            walk(callee, mult)
+        visiting.discard(name)
+
+    if entry:
+        walk(entry, 1.0)
+    else:                       # fallback: flat sum, no trip weighting
+        for comp in comps.values():
+            for op, moved, is_f32 in comp.collectives:
+                bytes_by_type[op] += moved
+                if is_f32:
+                    total["f32_bytes"] += moved
+            total["flops"] += comp.flops
+    grand = float(sum(bytes_by_type.values()))
+    return {"bytes_by_type": dict(bytes_by_type),
+            "counts": dict(counts),
+            "total_bytes": grand,
+            # XLA-CPU upcasts bf16 dot operands to f32 *before* SPMD
+            # partitioning, inflating gathers 2x vs a TPU lowering (which
+            # keeps bf16 through the collective). bf16-equivalent halves
+            # the f32 share — use this for the roofline collective term.
+            "total_bytes_bf16eq": grand - 0.5 * total["f32_bytes"],
+            "f32_bytes": total["f32_bytes"],
+            "dot_flops": total["flops"]}

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips (v5e pod),
+axes (data, model). Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model);
+the ``pod`` axis extends the data/sampler axis across the DCN/ICI boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}; "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (see launch/dryrun.py)")
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    import numpy as np
+    from jax.sharding import Mesh
+    arr = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (no placeholder devices)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

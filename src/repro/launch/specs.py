@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stands-ins + shardings per (arch x input shape).
+
+``input_specs`` returns weak-type-correct, shardable structs for every model
+input of the lowered step — no device allocation ever happens (the full
+configs are exercised ONLY through lower/compile).
+
+Step kinds:
+* train   -> the PPO learner update (``algos.ppo.make_lm_train_step``)
+* prefill -> prompt processing + cache build (``transformer.prefill``)
+* decode  -> ONE new token against a ``seq_len`` cache (``decode_step``)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as sh
+from repro.models import transformer
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ train
+def train_batch_shapes(cfg: ModelConfig, shape: InputShape
+                       ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    P_front = cfg.frontend_embeds
+    S_tok = S - P_front
+    batch = {
+        "tokens": _sds((B, S_tok), jnp.int32),
+        "targets": _sds((B, S_tok), jnp.int32),
+        "behavior_logp": _sds((B, S_tok), jnp.float32),
+        "advantages": _sds((B, S_tok), jnp.float32),
+        "returns": _sds((B, S_tok), jnp.float32),
+        "mask": _sds((B, S_tok), jnp.float32),
+    }
+    if P_front:
+        batch["extra_embeds"] = _sds((B, P_front, cfg.d_model), cfg.dtype)
+    if cfg.m_rope_sections:
+        total = S_tok + P_front + cfg.n_meta_tokens
+        batch["positions"] = _sds((3, B, total), jnp.int32)
+    return batch
+
+
+# ----------------------------------------------------------------- decode
+def decode_state_shapes(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, shape.global_batch,
+                                              shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh
+                ) -> Dict[str, Any]:
+    """Everything the dry-run needs for one (arch x shape):
+
+    returns {kind, fn_args (structs), in_specs, out_specs} where fn_args
+    excludes params (always first arg; params specs supplied separately).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    bspec = sh.batch_spec(B, mesh)
+
+    if shape.kind == "train":
+        batch = train_batch_shapes(cfg, shape)
+        specs = sh.train_batch_specs(cfg, batch, mesh)
+        return {"kind": "train", "args": (batch,), "arg_specs": (specs,)}
+
+    if shape.kind == "prefill":
+        P_front = cfg.frontend_embeds
+        S_tok = S - P_front
+        args = [_sds((B, S_tok), jnp.int32)]
+        arg_specs = [P(bspec[0], None)]
+        if P_front:
+            args.append(_sds((B, P_front, cfg.d_model), cfg.dtype))
+            arg_specs.append(P(bspec[0], None, None))
+        if cfg.m_rope_sections:
+            total = S_tok + P_front + cfg.n_meta_tokens
+            args.append(_sds((3, B, total), jnp.int32))
+            arg_specs.append(P(None, bspec[0], None))
+        state_shapes = jax.eval_shape(
+            lambda: transformer.init_decode_state(cfg, B, S))
+        out_state_specs = sh.decode_state_specs(cfg, state_shapes, mesh)
+        logits_spec = P(bspec[0],
+                        sh.shard_axes(cfg.vocab_size, ("model",), mesh))
+        return {"kind": "prefill", "args": tuple(args),
+                "arg_specs": tuple(arg_specs),
+                "out_specs": (out_state_specs, logits_spec)}
+
+    # decode: serve_step(params, state, token)
+    state = decode_state_shapes(cfg, shape)
+    state_specs = sh.decode_state_specs(cfg, state, mesh)
+    token = _sds((B, 1), jnp.int32)
+    token_spec = P(bspec[0], None)
+    logits_spec = P(bspec[0],
+                    sh.shard_axes(cfg.vocab_size, ("model",), mesh))
+    return {"kind": "decode", "args": (state, token),
+            "arg_specs": (state_specs, token_spec),
+            "out_specs": (state_specs, logits_spec)}

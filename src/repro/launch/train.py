@@ -1,0 +1,119 @@
+"""End-to-end training driver.
+
+Two modes, selected by --mode:
+* ``rl``  — the paper's experiment: PPO + N parallel samplers on a pure-JAX
+  env (sync or async runtime). CPU-runnable; this is what examples and
+  benchmarks call.
+* ``lm``  — sequence-model PPO (RLHF-style): synthetic rollout batches
+  drive ``make_lm_train_step`` under a mesh, with checkpointing. On CPU use
+  a reduced arch (``--arch <id>-reduced``); full configs belong to the
+  dry-run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --mode rl --env pendulum \
+      --num-samplers 4 --iterations 20
+  PYTHONPATH=src python -m repro.launch.train --mode lm \
+      --arch mixtral-8x7b-reduced --steps 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import envs
+from repro.algos.ppo import PPOConfig, make_lm_train_step, make_mlp_learner
+from repro.checkpoint import save
+from repro.configs import get_config
+from repro.core import AsyncOrchestrator, SyncRunner
+from repro.core import sampler as sampler_mod
+from repro.models import mlp_policy, transformer
+from repro.optim import adam
+
+
+def run_rl(args) -> None:
+    env = envs.make(args.env)
+    key = jax.random.PRNGKey(args.seed)
+    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim,
+                                    hidden=args.hidden)
+    opt = adam(args.lr)
+    opt_state = opt.init(params)
+    learn = make_mlp_learner(opt, PPOConfig(lr=args.lr))
+    rollout = sampler_mod.make_env_rollout(env, args.horizon)
+    per = sampler_mod.split_batch(args.global_batch, args.num_samplers)
+    carries = [
+        sampler_mod.init_env_carry(env, jax.random.PRNGKey(args.seed + i),
+                                   per)
+        for i in range(args.num_samplers)
+    ]
+    cls = AsyncOrchestrator if args.async_mode else SyncRunner
+    runner = cls(rollout, learn, params, opt_state, carries,
+                 args.num_samplers)
+    logs = runner.run(args.iterations)
+    for log in logs:
+        print(json.dumps(log.as_dict()))
+    if args.ckpt_dir:
+        save(args.ckpt_dir, args.iterations,
+             runner.params if args.async_mode else runner.params,
+             metadata={"env": args.env})
+
+
+def run_lm(args) -> None:
+    cfg = get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init_params(cfg, key)
+    opt = adam(args.lr, moment_dtype=cfg.dtype)
+    opt_state = opt.init(params)
+    step = jax.jit(make_lm_train_step(cfg, opt, PPOConfig(lr=args.lr)))
+    B, S = args.batch, args.seq_len
+    kd = jax.random.PRNGKey(args.seed + 1)
+    for i in range(args.steps):
+        kd, kb = jax.random.split(kd)
+        batch = {
+            "tokens": jax.random.randint(kb, (B, S), 0, cfg.vocab_size),
+            "targets": jax.random.randint(kb, (B, S), 0, cfg.vocab_size),
+            "behavior_logp": -jnp.ones((B, S)) * 5.0,
+            "advantages": jax.random.normal(kb, (B, S)),
+            "returns": jax.random.normal(kb, (B, S)),
+            "mask": jnp.ones((B, S)),
+        }
+        if cfg.frontend_embeds:
+            batch["extra_embeds"] = jnp.zeros(
+                (B, cfg.frontend_embeds, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        print(f"step {i}: loss={float(metrics['loss']):.4f} "
+              f"({time.perf_counter() - t0:.2f}s)")
+    if args.ckpt_dir:
+        save(args.ckpt_dir, args.steps, params,
+             metadata={"arch": args.arch})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("rl", "lm"), default="rl")
+    ap.add_argument("--env", default="pendulum")
+    ap.add_argument("--arch", default="mixtral-8x7b-reduced")
+    ap.add_argument("--num-samplers", type=int, default=4)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--horizon", type=int, default=128)
+    ap.add_argument("--iterations", type=int, default=10)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async", dest="async_mode", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    (run_rl if args.mode == "rl" else run_lm)(args)
+
+
+if __name__ == "__main__":
+    main()

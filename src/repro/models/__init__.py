@@ -1,0 +1,9 @@
+from repro.models import (  # noqa: F401
+    attention,
+    layers,
+    mlp_policy,
+    moe,
+    rope,
+    ssm,
+    transformer,
+)

@@ -1,0 +1,311 @@
+"""Attention: GQA / sliding-window / QKV-bias / M-RoPE, cache-aware.
+
+Reference (pure-jnp) implementation used by training, the dry-run, and as
+the semantic spec for the Pallas kernels. Three paths:
+
+* ``full_causal`` — work-efficient causal attention by **recursive halving**:
+  the lower-left rectangle of each diagonal square is dense (computed
+  chunked over KV with streaming-softmax stats, zero masked waste) and the
+  two diagonal sub-squares recurse. Exact causal FLOPs, never materializes
+  an (S x S) score tensor, and the recursion is resolved at trace time.
+* ``swa`` — banded attention: each Q block attends to a statically-sized
+  KV band ``[q0 - window_pad, q0 + q_block)`` sliced from a left-padded KV,
+  so FLOPs are O(S * window) instead of O(S^2).
+* ``decode`` — one query row against a (possibly ring-buffered) KV cache,
+  masked by cache-slot positions.
+
+Layout: q ``(B, S, K, G, hd)`` (K = kv heads, G = q-per-kv group), k/v
+``(B, S, K, hd)``. Streaming-softmax stats are float32 throughout.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dist_ctx
+from repro.models import layers, rope
+
+
+# ===================================================================== init
+def init_attention(cfg, key) -> dict:
+    dtype = layers.param_dtype(cfg)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": layers.dense_init(kq, (d, cfg.n_heads * hd), dtype),
+        "wk": layers.dense_init(kk, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": layers.dense_init(kv, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": layers.dense_init(ko, (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def project_qkv(cfg, p: dict, x: jnp.ndarray,
+                cos: jnp.ndarray, sin: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> q (B,S,K,G,hd), k/v (B,S,K,hd); RoPE applied."""
+    B, S, _ = x.shape
+    K, G, hd = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    q = layers.matmul(x, dist_ctx.gather_weight(p["wq"], "col"))
+    k = layers.matmul(x, dist_ctx.gather_weight(p["wk"], "col"))
+    v = layers.matmul(x, dist_ctx.gather_weight(p["wv"], "col"))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, K * G, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    q = rope.apply_rope(q, cos, sin).reshape(B, S, K, G, hd)
+    k = rope.apply_rope(k, cos, sin)
+    return _constrain_heads(q, k, v)
+
+
+def _head_plan(K: int, G: int) -> str:
+    """Which head dim to place on the model axis (uneven ok, GSPMD pads).
+
+    Per-device attention work is ~ G*ceil(K/M) if K is sharded, else
+    K*ceil(G/M); pick the smaller (M = model-axis size).
+    """
+    M = dist_ctx.model_axis_size()
+    if M <= 1:
+        return "none"
+    work_k = G * -(-K // M)
+    work_g = K * -(-G // M)
+    return "kv" if work_k <= work_g else "group"
+
+
+def _constrain_heads(q, k, v):
+    """Pin attention-activation sharding: batch on data, one head dim on
+    model, seq replicated (the residual stream is sequence-parallel; this
+    forces the Megatron all-gather/reduce-scatter at the block boundary)."""
+    from jax.sharding import PartitionSpec as P
+    K, G = q.shape[2], q.shape[3]
+    plan = _head_plan(K, G)
+    if plan == "none":
+        return q, k, v
+    ctx = dist_ctx.get()
+    from repro.distributed import sharding as shm
+    bt = shm.shard_axes(q.shape[0], shm.batch_axes(ctx.mesh), ctx.mesh)
+    if plan == "kv":
+        q = dist_ctx.constrain_spec(q, P(bt, None, "model", None, None))
+        k = dist_ctx.constrain_spec(k, P(bt, None, "model", None))
+        v = dist_ctx.constrain_spec(v, P(bt, None, "model", None))
+    else:
+        q = dist_ctx.constrain_spec(q, P(bt, None, None, "model", None))
+        k = dist_ctx.constrain_spec(k, P(bt, None, None, None))
+        v = dist_ctx.constrain_spec(v, P(bt, None, None, None))
+    return q, k, v
+
+
+def attn_out(cfg, p: dict, o: jnp.ndarray) -> jnp.ndarray:
+    """o (B,S,K,G,hd) -> (B,S,D)."""
+    B, S = o.shape[:2]
+    return layers.matmul(o.reshape(B, S, -1),
+                         dist_ctx.gather_weight(p["wo"], "row"))
+
+
+# ============================================================ softmax stats
+class Stats(NamedTuple):
+    acc: jnp.ndarray   # (B, Sq, K, G, hd) f32 — unnormalised weighted values
+    m: jnp.ndarray     # (B, Sq, K, G)     f32 — running max
+    l: jnp.ndarray     # (B, Sq, K, G)     f32 — running denominator
+
+
+def _empty_stats(q: jnp.ndarray) -> Stats:
+    B, Sq, K, G, hd = q.shape
+    return Stats(
+        jnp.zeros((B, Sq, K, G, hd), jnp.float32),
+        jnp.full((B, Sq, K, G), -jnp.inf, jnp.float32),
+        jnp.zeros((B, Sq, K, G), jnp.float32),
+    )
+
+
+def _block_stats(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 mask: Optional[jnp.ndarray]) -> Stats:
+    """One dense (q-block x kv-block) contribution. mask: (Sq, Skv) or None."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bqkgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    # rows that are fully masked keep m=-inf; exp(-inf - -inf) is nan -> guard
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    if mask is not None:
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqkgs,bskh->bqkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return Stats(acc, jnp.where(jnp.isfinite(m), m, -jnp.inf), l)
+
+
+def _merge(a: Stats, b: Stats) -> Stats:
+    """Combine two stats over the same Q rows, disjoint KV sets."""
+    m = jnp.maximum(a.m, b.m)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    ca = jnp.where(jnp.isfinite(a.m), jnp.exp(a.m - m_safe), 0.0)
+    cb = jnp.where(jnp.isfinite(b.m), jnp.exp(b.m - m_safe), 0.0)
+    return Stats(
+        a.acc * ca[..., None] + b.acc * cb[..., None],
+        m,
+        a.l * ca + b.l * cb,
+    )
+
+
+def _concat_q(a: Stats, b: Stats) -> Stats:
+    return Stats(*(jnp.concatenate([x, y], axis=1) for x, y in zip(a, b)))
+
+
+def _finalize(s: Stats, dtype) -> jnp.ndarray:
+    l = jnp.where(s.l == 0.0, 1.0, s.l)
+    return (s.acc / l[..., None]).astype(dtype)
+
+
+# ================================================== dense rectangle, chunked
+def _dense_stats(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 kv_block: int) -> Stats:
+    """Unmasked attention of q against all of k/v, scanned over KV blocks."""
+    B, Sk, K, hd = k.shape
+    if Sk <= kv_block:
+        return _block_stats(q, k, v, None)
+    nb = Sk // kv_block
+    assert Sk % kv_block == 0, f"Skv={Sk} not divisible by {kv_block}"
+    kb = jnp.moveaxis(k.reshape(B, nb, kv_block, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, kv_block, K, hd), 1, 0)
+
+    def step(carry: Stats, xs):
+        kc, vc = xs
+        return _merge(carry, _block_stats(q, kc, vc, None)), None
+
+    out, _ = jax.lax.scan(step, _empty_stats(q), (kb, vb))
+    return out
+
+
+# ======================================================= causal (recursive)
+def _causal_stats(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  leaf: int, kv_block: int) -> Stats:
+    """Exact-FLOPs causal attention over a diagonal square (Sq == Skv)."""
+    Sq = q.shape[1]
+    if Sq <= leaf or Sq % 2:
+        tri = jnp.tril(jnp.ones((Sq, Sq), bool))
+        return _block_stats(q, k, v, tri)
+    h = Sq // 2
+    top = _causal_stats(q[:, :h], k[:, :h], v[:, :h], leaf, kv_block)
+    diag = _causal_stats(q[:, h:], k[:, h:], v[:, h:], leaf, kv_block)
+    rect = _dense_stats(q[:, h:], k[:, :h], v[:, :h], kv_block)
+    return _concat_q(top, _merge(rect, diag))
+
+
+def full_causal(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                *, leaf: int = 1024, kv_block: int = 1024) -> jnp.ndarray:
+    """Causal attention. q (B,S,K,G,hd), k/v (B,S,K,hd) -> (B,S,K,G,hd)."""
+    S = q.shape[1]
+    if S & (S - 1) or S <= leaf:        # non-power-of-two: single masked leaf
+        assert S <= 8192, f"non-power-of-two S={S} too large for dense leaf"
+        tri = jnp.tril(jnp.ones((S, S), bool))
+        return _finalize(_block_stats(q, k, v, tri), q.dtype)
+    return _finalize(_causal_stats(q, k, v, leaf, kv_block), q.dtype)
+
+
+# ============================================================ sliding window
+def swa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, window: int,
+        *, q_block: int = 512) -> jnp.ndarray:
+    """Banded causal attention, O(S * window) FLOPs.
+
+    Each Q block of ``q_block`` rows attends to the statically-shaped band
+    ``[q0 - wpad, q0 + q_block)`` taken from a left-padded KV.
+    """
+    B, S, K, G, hd = q.shape
+    if S <= window:
+        # window covers everything: plain causal is exact
+        return full_causal(q, k, v, leaf=min(512, S))
+    q_block = min(q_block, S)
+    if S % q_block:
+        # pad up to a q_block multiple; padded tail rows are sliced off and
+        # real queries can never attend to padded keys (causality)
+        Sp = math.ceil(S / q_block) * q_block
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        out = swa(jnp.pad(q, pad + ((0, 0),)), jnp.pad(k, pad),
+                  jnp.pad(v, pad), window, q_block=q_block)
+        return out[:, :S]
+    wpad = math.ceil(window / 128) * 128
+    band = wpad + q_block
+    kp = jnp.pad(k, ((0, 0), (wpad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (wpad, 0), (0, 0), (0, 0)))
+    nq = S // q_block
+    qb = jnp.moveaxis(q.reshape(B, nq, q_block, K, G, hd), 1, 0)
+    starts = jnp.arange(nq) * q_block          # band start in padded coords
+
+    rel_q = jnp.arange(q_block)[:, None]       # local row
+    rel_k = jnp.arange(band)[None, :] - wpad   # key offset rel. to q0
+    # key global idx = q0 + rel_k ; query global idx = q0 + rel_q
+    base_mask = (rel_k <= rel_q) & (rel_q - rel_k < window)
+
+    def per_block(xs):
+        qc, q0 = xs
+        kc = jax.lax.dynamic_slice_in_dim(kp, q0, band, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, q0, band, axis=1)
+        valid = (q0 + rel_k) >= 0              # mask out left padding
+        st = _block_stats(qc, kc, vc, base_mask & valid)
+        return _finalize(st, q.dtype)
+
+    out = jax.lax.map(per_block, (qb, starts))         # (nq, B, qb, K, G, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, K, G, hd)
+
+
+# ================================================================== decode
+def decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+           valid: jnp.ndarray) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    q ``(B,K,G,hd)``; k_cache/v_cache ``(B,Sc,K,hd)``; valid ``(Sc,)`` bool
+    (slot holds a live key). Returns ``(B,K,G,hd)``.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ============================================================== full apply
+def attention_block(cfg, p: dict, x: jnp.ndarray,
+                    cos: jnp.ndarray, sin: jnp.ndarray,
+                    *, return_kv: bool = False):
+    """Training/prefill attention for one layer. x (B,S,D)."""
+    q, k, v = project_qkv(cfg, p, x, cos, sin)
+    if cfg.sliding_window:
+        o = swa(q, k, v, cfg.sliding_window)
+    else:
+        o = full_causal(q, k, v)
+    y = attn_out(cfg, p, o)
+    return (y, k, v) if return_kv else y
+
+
+def attention_decode_block(cfg, p: dict, x: jnp.ndarray,
+                           cos: jnp.ndarray, sin: jnp.ndarray,
+                           k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                           valid: jnp.ndarray, write_idx: jnp.ndarray):
+    """Decode one token. x (B,1,D); cache (B,Sc,K,hd); returns (y, k', v')."""
+    B = x.shape[0]
+    K, G, hd = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    q, k, v = project_qkv(cfg, p, x, cos, sin)  # q (B,1,K,G,hd), k (B,1,K,hd)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, write_idx,
+                                                  axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, write_idx,
+                                                  axis=1)
+    o = decode(q[:, 0], k_cache, v_cache, valid)
+    y = attn_out(cfg, p, o[:, None].reshape(B, 1, K, G, hd))
+    return y, k_cache, v_cache

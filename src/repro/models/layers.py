@@ -1,0 +1,100 @@
+"""Shared neural building blocks (no flax/haiku — plain pytrees of arrays).
+
+Conventions
+-----------
+* Every ``init_*`` returns a (nested) dict of ``jnp.ndarray`` in ``cfg.dtype``.
+* Every ``apply`` is a pure function ``(cfg, params, x, ...) -> y``.
+* Matmuls accumulate in float32 (``preferred_element_type``) and cast back —
+  the TPU-correct recipe for bf16 weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (the llama/mixtral recipe)."""
+    if scale is None:
+        scale = shape[0] ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x @ w in the activation dtype.
+
+    bf16 x bf16 dots accumulate in f32 on the MXU natively; requesting
+    ``preferred_element_type=f32`` here makes XLA's SPMD partitioner promote
+    the *operands* (and their FSDP all-gathers) to f32 — 2x collective and
+    temp bytes for nothing. Measured in EXPERIMENTS.md §Perf (llama3-405b
+    train_4k).
+    """
+    return jnp.matmul(x, w)
+
+
+# ------------------------------------------------------------------ norms
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ SwiGLU
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),        # gate
+        "w3": dense_init(k2, (d_model, d_ff), dtype),        # up
+        "w2": dense_init(k3, (d_ff, d_model), dtype),        # down
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.distributed import context as dist_ctx
+    w1 = dist_ctx.gather_weight(params["w1"], "col")
+    w3 = dist_ctx.gather_weight(params["w3"], "col")
+    w2 = dist_ctx.gather_weight(params["w2"], "row")
+    gate = jax.nn.silu(matmul(x, w1).astype(jnp.float32))
+    up = matmul(x, w3).astype(jnp.float32)
+    return matmul((gate * up).astype(x.dtype), w2)
+
+
+# ------------------------------------------------------------------ embed
+def init_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: dict, h: jnp.ndarray) -> jnp.ndarray:
+    """h @ table.T  -> logits (f32)."""
+    return jnp.matmul(h, params["table"].T,
+                      preferred_element_type=jnp.float32)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"w": dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = matmul(x, params["w"])
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y

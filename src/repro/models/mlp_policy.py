@@ -1,0 +1,78 @@
+"""Gaussian-MLP policy + value network — the paper's own model class.
+
+WALL-E's experiments run PPO with a small MLP policy on MuJoCo continuous
+control; this is that model (tanh hidden layers, state-independent log-std),
+used by benchmarks/fig3..fig7 and examples/quickstart.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+LOG_STD_INIT = -0.5
+
+
+def init_mlp_net(key, sizes, dtype=jnp.float32) -> list:
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [
+        {"w": layers.dense_init(k, (i, o), dtype), "b": jnp.zeros((o,), dtype)}
+        for k, i, o in zip(ks, sizes[:-1], sizes[1:])
+    ]
+
+
+def mlp_apply(net: list, x: jnp.ndarray) -> jnp.ndarray:
+    for i, lyr in enumerate(net):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(net) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def init_policy(key, obs_dim: int, act_dim: int,
+                hidden: int = 64, depth: int = 2) -> Dict:
+    kp, kv = jax.random.split(key)
+    sizes = [obs_dim] + [hidden] * depth
+    return {
+        "pi": init_mlp_net(kp, sizes + [act_dim]),
+        "log_std": jnp.full((act_dim,), LOG_STD_INIT, jnp.float32),
+        "vf": init_mlp_net(kv, sizes + [1]),
+    }
+
+
+def policy_dist(params: Dict, obs: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mean = mlp_apply(params["pi"], obs)
+    std = jnp.exp(params["log_std"])
+    return mean, jnp.broadcast_to(std, mean.shape)
+
+
+def gaussian_logp(mean, std, action) -> jnp.ndarray:
+    z = (action - mean) / std
+    return jnp.sum(-0.5 * z ** 2 - jnp.log(std)
+                   - 0.5 * math.log(2 * math.pi), axis=-1)
+
+
+def sample_action(params: Dict, obs: jnp.ndarray, key
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mean, std = policy_dist(params, obs)
+    action = mean + std * jax.random.normal(key, mean.shape)
+    return action, gaussian_logp(mean, std, action)
+
+
+def action_logp(params: Dict, obs: jnp.ndarray, action: jnp.ndarray
+                ) -> jnp.ndarray:
+    mean, std = policy_dist(params, obs)
+    return gaussian_logp(mean, std, action)
+
+
+def entropy(params: Dict) -> jnp.ndarray:
+    return jnp.sum(params["log_std"] + 0.5 * math.log(2 * math.pi * math.e))
+
+
+def value_apply(params: Dict, obs: jnp.ndarray) -> jnp.ndarray:
+    return mlp_apply(params["vf"], obs)[..., 0]

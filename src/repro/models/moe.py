@@ -1,0 +1,142 @@
+"""Mixture-of-Experts MLP: top-k routing with GShard-style capacity dispatch.
+
+Dispatch/combine are grouped einsums (group = batch row), the standard
+TPU-friendly formulation (MaxText "dropping" implementation): one-hot
+dispatch tensors stay ``(B, S*k, E, C)`` with per-group capacity
+``C = ceil(S*k/E * capacity_factor)`` so memory scales with the group, not
+the global token count. Router runs in float32; load-balance aux loss is the
+Switch-Transformer form.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dist_ctx
+from repro.models import layers
+
+
+def init_moe(cfg, key) -> dict:
+    dtype = layers.param_dtype(cfg)
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+
+    def expert_init(k, shape):
+        ks = jax.random.split(k, e)
+        return jnp.stack([layers.dense_init(ki, shape, dtype) for ki in ks])
+
+    return {
+        "router": layers.dense_init(kr, (d, e), dtype, scale=0.02),
+        "w1": expert_init(k1, (d, f)),
+        "w3": expert_init(k2, (d, f)),
+        "w2": expert_init(k3, (f, d)),
+    }
+
+
+GROUP_TOKENS = 1024     # GShard-style dispatch group (capacity is per-group;
+                        # dispatch/combine einsum FLOPs and memory scale
+                        # linearly with this — §Perf mixtral iteration 3)
+
+
+def capacity(cfg, seq_len: int) -> int:
+    slots = seq_len * cfg.top_k
+    return max(1, math.ceil(slots / cfg.n_experts * cfg.capacity_factor))
+
+
+def route(cfg, router_w: jnp.ndarray, x: jnp.ndarray
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> (weights (B,S,k) f32, idx (B,S,k), probs (B,S,E), aux)."""
+    logits = jnp.matmul(x, router_w,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_i = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(top_v, axis=-1)            # Mixtral renorm
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    sel = jax.nn.one_hot(top_i, cfg.n_experts, dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))  # fraction per expert
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(frac * mean_p)
+    return weights, top_i, probs, aux
+
+
+def moe_block(cfg, p: dict, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE MLP. x (B,S,D) -> (y (B,S,D), aux_loss scalar f32).
+
+    Long sequences are cut into ``GROUP_TOKENS``-sized dispatch groups so
+    the one-hot dispatch/combine tensors stay O(group) — dispatch memory
+    and FLOPs scale linearly with group size (EXPERIMENTS.md §Perf,
+    mixtral-8x7b x prefill_32k iteration 1).
+    """
+    B, S, D = x.shape
+    if S > GROUP_TOKENS and S % GROUP_TOKENS == 0:
+        g = S // GROUP_TOKENS
+        # seq arrives model-sharded (sequence-parallel residual); merging a
+        # data-sharded B with a model-sharded S defeats GSPMD's reshape
+        # propagation and replicates the dispatch tensors — pin the layout:
+        # gather seq, reshape, and shard the merged group dim on batch axes
+        x = dist_ctx.constrain(x, "batch", None, None)
+        xg = x.reshape(B * g, GROUP_TOKENS, D)
+        xg = dist_ctx.constrain(xg, "batch", None, None)
+        y, aux = _moe_grouped(cfg, p, xg)
+        y = dist_ctx.constrain(y, "batch", None, None)
+        return y.reshape(B, S, D), aux
+    return _moe_grouped(cfg, p, x)
+
+
+def _moe_grouped(cfg, p: dict, x: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    weights, top_i, _, aux = route(cfg, p["router"], x)
+
+    # ---- slot bookkeeping: flatten (S, k) -> T routed slots per group
+    T = S * k
+    e_slot = top_i.reshape(B, T)                        # expert per slot
+    w_slot = weights.reshape(B, T)
+    e_oh = jax.nn.one_hot(e_slot, E, dtype=jnp.float32)         # (B,T,E)
+    rank = jnp.cumsum(e_oh, axis=1) - e_oh              # position in expert
+    rank_sel = jnp.sum(rank * e_oh, axis=-1)            # (B,T)
+    keep = rank_sel < C
+    # dispatch[b,t,e,c] = 1 iff slot t -> (expert e, capacity slot c)
+    c_oh = jax.nn.one_hot(rank_sel.astype(jnp.int32), C, dtype=jnp.float32)
+    disp = (e_oh[..., None] * c_oh[:, :, None, :]
+            * keep[..., None, None].astype(jnp.float32))        # (B,T,E,C)
+    comb = disp * w_slot[..., None, None]
+
+    disp = disp.astype(x.dtype)
+    xs = jnp.repeat(x, k, axis=1) if k > 1 else x       # token per slot (B,T,D)
+    buf = jnp.einsum("btec,btd->becd", disp, xs,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    buf = dist_ctx.constrain(buf, "batch", None, None, None)
+
+    # ---- expert FFN (SwiGLU), batched over E
+    # Train/prefill: explicitly re-gather the experts' fsdp (D) shards so
+    # every expert einsum is local — gathered slab = E*D*F/model_axis bytes
+    # per layer, orders of magnitude below letting GSPMD psum
+    # (group,E,C,F) partials. Serve mode keeps weights resident (the
+    # single-token buffers are the cheap side there).
+    from jax.sharding import PartitionSpec as _P
+    if dist_ctx.mode() == "serve":
+        w1, w3, w2 = p["w1"], p["w3"], p["w2"]
+    else:
+        w1 = dist_ctx.constrain_spec(p["w1"], _P(None, None, "model"))
+        w3 = dist_ctx.constrain_spec(p["w3"], _P(None, None, "model"))
+        w2 = dist_ctx.constrain_spec(p["w2"], _P(None, "model", None))
+    gate = jnp.einsum("becd,edf->becf", buf, w1,
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("becd,edf->becf", buf, w3,
+                    preferred_element_type=jnp.float32)
+    act = (jax.nn.silu(gate) * up).astype(x.dtype)
+    out = jnp.einsum("becf,efd->becd", act, w2,
+                     preferred_element_type=jnp.float32)
+
+    y = jnp.einsum("btec,becd->btd", comb.astype(jnp.float32), out)
+    y = y.reshape(B, S, k, D).sum(axis=2) if k > 1 else y.reshape(B, S, D)
+    # cast before leaving the block: the residual-restore psum/reduce-scatter
+    # then moves bf16, not f32 (halves the combine collective)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,51 @@
+"""Rotary position embeddings: classic RoPE + Qwen2-VL M-RoPE.
+
+M-RoPE splits the ``head_dim/2`` frequency channels into (t, h, w) sections;
+each section reads its angle from the matching component of a 3-row position
+id tensor [arXiv:2409.12191]. Plain RoPE is the one-section special case.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_cos_sin(positions: jnp.ndarray,
+                 head_dim: int,
+                 theta: float,
+                 sections: Tuple[int, ...] = ()
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (cos, sin) of shape ``(..., S, head_dim/2)``.
+
+    positions: ``(..., S)`` int32 for RoPE, ``(3, ..., S)`` for M-RoPE.
+    """
+    half = head_dim // 2
+    freqs = theta ** (-np.arange(half, dtype=np.float32) / half)
+    freqs = jnp.asarray(freqs)
+    if sections:
+        assert positions.shape[0] == len(sections) == 3
+        sec_id = np.repeat(np.arange(len(sections)), np.asarray(sections))
+        # (half, ..., S): pick the t/h/w position row per frequency channel
+        pos = positions[sec_id]                       # static fancy index
+        pos = jnp.moveaxis(pos, 0, -1)                # (..., S, half)
+        angles = pos.astype(jnp.float32) * freqs
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Rotate ``x`` of shape ``(B, S, n_heads, head_dim)``.
+
+    cos/sin are ``(B, S, head_dim/2)`` (broadcast over the head axis).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)

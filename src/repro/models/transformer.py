@@ -1,0 +1,436 @@
+"""Decoder-only sequence-model policy: dense / MoE / SSM / hybrid / audio / vlm.
+
+One implementation covers all ten assigned architectures; the per-layer body
+dispatches on ``cfg.family``. Layers are **stacked** (leading ``L`` axis) and
+iterated with ``lax.scan`` so the 126-layer llama3-405b lowers to a single
+compiled layer body, and activation rematerialisation is a scan-level policy.
+
+Three entry points (these are what the launcher lowers):
+* ``forward``       — full-sequence hidden states (training / prefill)
+* ``prefill``       — forward + KV/SSM cache construction + last-token logits
+* ``decode_step``   — one token against the cache (the sampler's inner step)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dist_ctx
+from repro.models import attention, layers, moe, rope, ssm
+
+
+# ===================================================================== init
+def _init_layer(cfg, key) -> Dict[str, Any]:
+    dtype = layers.param_dtype(cfg)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if cfg.has_attention:
+        p["attn_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["attn"] = attention.init_attention(cfg, ks[0])
+    if cfg.is_ssm:
+        if cfg.family == "ssm":
+            p["ssm_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["ssm"] = ssm.init_ssm(cfg, ks[1])
+    if cfg.family == "hybrid":
+        p["fuse_norm_attn"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["fuse_norm_ssm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    if cfg.d_ff:
+        p["mlp_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe.init_moe(cfg, ks[2])
+        else:
+            p["mlp"] = layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dtype = layers.param_dtype(cfg)
+    k_emb, k_layers, k_head, k_val, k_meta = jax.random.split(key, 5)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": layers.init_embedding(k_emb, cfg.vocab_size, cfg.d_model,
+                                       dtype),
+        "layers": jax.vmap(lambda k: _init_layer(cfg, k))(layer_keys),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": layers.init_linear(k_head, cfg.d_model, cfg.vocab_size,
+                                      dtype),
+        "value_head": layers.init_linear(k_val, cfg.d_model, 1, dtype,
+                                         bias=True),
+    }
+    if cfg.n_meta_tokens:
+        params["meta_tokens"] = layers.dense_init(
+            k_meta, (cfg.n_meta_tokens, cfg.d_model), dtype, scale=0.02)
+    return params
+
+
+# ================================================================ positions
+def _rope_tables(cfg, positions: jnp.ndarray):
+    """positions (B,S) or (3,B,S) -> (cos, sin) of (B,S,half)."""
+    return rope.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta,
+                             cfg.m_rope_sections)
+
+
+def default_positions(cfg, batch: int, seq: int) -> jnp.ndarray:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    if cfg.m_rope_sections:
+        pos = jnp.broadcast_to(pos, (3, batch, seq))
+    return pos
+
+
+# ============================================================== layer body
+def _layer_fwd(cfg, p: Dict[str, Any], h: jnp.ndarray,
+               cos, sin, impl: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One layer, full-sequence. Returns (h, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = h + ssm.ssm_block(cfg, p["ssm"],
+                              layers.rmsnorm(p["ssm_norm"], h, cfg.norm_eps),
+                              impl=impl)
+        return h, aux
+    xn = layers.rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a = attention.attention_block(cfg, p["attn"], xn, cos, sin)
+        s = ssm.ssm_block(cfg, p["ssm"], xn, impl=impl)
+        mixed = 0.5 * (layers.rmsnorm(p["fuse_norm_attn"], a, cfg.norm_eps)
+                       + layers.rmsnorm(p["fuse_norm_ssm"], s, cfg.norm_eps))
+        h = h + mixed
+    else:
+        h = h + attention.attention_block(cfg, p["attn"], xn, cos, sin)
+    if cfg.d_ff:
+        xm = layers.rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            y, aux = moe.moe_block(cfg, p["moe"], xm)
+            h = h + y
+        else:
+            h = h + layers.mlp(p["mlp"], xm)
+    return h, aux
+
+
+# ================================================================= forward
+def embed_inputs(cfg, params, tokens: jnp.ndarray,
+                 extra_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Token embeds with (meta tokens | frontend embeds) prepended."""
+    h = layers.embed(params["embed"], tokens)
+    prefix = []
+    if "meta_tokens" in params:
+        B = tokens.shape[0]
+        prefix.append(jnp.broadcast_to(
+            params["meta_tokens"][None], (B,) + params["meta_tokens"].shape))
+    if extra_embeds is not None:
+        prefix.append(extra_embeds.astype(h.dtype))
+    if prefix:
+        h = jnp.concatenate(prefix + [h], axis=1)
+    return h
+
+
+def _near_sqrt_factor(L: int) -> int:
+    """Largest divisor of L that is <= sqrt(L) (1 if L is prime)."""
+    for d in range(int(math.isqrt(L)), 0, -1):
+        if L % d == 0:
+            return d
+    return 1
+
+
+def forward(cfg, params, tokens: jnp.ndarray, *,
+            positions: Optional[jnp.ndarray] = None,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            impl: str = "reference",
+            remat: str = "scan2") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S_tok) -> (hidden (B, S_total, D), moe_aux scalar).
+
+    remat: "none" | "full" (checkpoint every layer) | "scan2" (sqrt-L
+    two-level scan: peak saved residuals ~ (L1+L2) instead of L carries).
+    """
+    h = embed_inputs(cfg, params, tokens, extra_embeds)
+    B, S, _ = h.shape
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    cos, sin = (None, None)
+    if cfg.has_attention:
+        cos, sin = _rope_tables(cfg, positions)
+
+    def body(carry, layer_p):
+        # sequence-parallel residual stream: scan carries are saved sharded
+        carry = dist_ctx.constrain(carry, "batch", "seq", None)
+        y, aux = _layer_fwd(cfg, layer_p, carry, cos, sin, impl)
+        y = dist_ctx.constrain(y, "batch", "seq", None)
+        return y, aux
+
+    L = cfg.n_layers
+    two_level = remat in ("scan2", "scan2_dots")
+    L1 = _near_sqrt_factor(L) if two_level else 1
+    if two_level and L1 > 1:
+        L2 = L // L1
+        stacked2 = jax.tree.map(
+            lambda x: x.reshape((L1, L2) + x.shape[1:]), params["layers"])
+
+        # "scan2_dots": save projection outputs inside the inner scan so
+        # the backward pass does not re-all-gather the sequence-parallel
+        # residual stream (collective/memory trade, EXPERIMENTS.md §Perf
+        # llama3-405b train iteration). Attention einsums carry batch dims
+        # and are still rematerialised.
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat == "scan2_dots" else None)
+        inner_body = jax.checkpoint(body, policy=policy)
+
+        @jax.checkpoint
+        def outer(carry, group_p):
+            return jax.lax.scan(inner_body, carry, group_p)
+
+        h, auxes = jax.lax.scan(outer, h, stacked2)
+        aux_sum = jnp.sum(auxes)
+    else:
+        if remat in ("full", "scan2", "scan2_dots"):
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        h, auxes = jax.lax.scan(body, h, params["layers"])
+        aux_sum = jnp.sum(auxes)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux_sum
+
+
+# ================================================================== heads
+def lm_logits(cfg, params, h: jnp.ndarray) -> jnp.ndarray:
+    """Full logits (f32). Only for small vocab / short suffixes."""
+    return jnp.matmul(h, params["lm_head"]["w"],
+                      preferred_element_type=jnp.float32)
+
+
+def value(cfg, params, h: jnp.ndarray) -> jnp.ndarray:
+    """Value head (B,S) f32."""
+    return layers.linear(params["value_head"], h)[..., 0].astype(jnp.float32)
+
+
+def token_logp_entropy(cfg, params, h: jnp.ndarray, targets: jnp.ndarray,
+                       chunk: int = 256
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token log-prob of ``targets`` and entropy, chunked over S so the
+    (B,S,V) logits tensor never materialises. Returns two (B,S) f32 arrays."""
+    B, S, D = h.shape
+    w = params["lm_head"]["w"]
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    def per_chunk(xs):
+        hc, tc = xs
+        z = jnp.matmul(hc, w, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(z, axis=-1)
+        tgt = jnp.take_along_axis(z, tc[..., None], axis=-1)[..., 0]
+        p = jax.nn.softmax(z, axis=-1)
+        ent = lse - jnp.sum(p * z, axis=-1)
+        return tgt - lse, ent
+
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, D), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+    logp, ent = jax.lax.map(per_chunk, (hs, ts))
+    return (jnp.moveaxis(logp, 0, 1).reshape(B, S),
+            jnp.moveaxis(ent, 0, 1).reshape(B, S))
+
+
+# ============================================================ decode cache
+def cache_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_decode_state(cfg, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Zero-initialised decode state sized for ``seq_len`` total positions."""
+    dtype = layers.param_dtype(cfg)
+    L = cfg.n_layers
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.has_attention:
+        C = cache_len(cfg, seq_len)
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        state["k"] = jnp.zeros((L, batch, C, K, hd), dtype)
+        state["v"] = jnp.zeros((L, batch, C, K, hd), dtype)
+        state["cache_pos"] = jnp.full((C,), -1, jnp.int32)
+    if cfg.is_ssm:
+        state["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                  dtype)
+        state["ssm"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state),
+                                 jnp.float32)
+    return state
+
+
+def _layer_decode(cfg, p, h, cos, sin, caches, valid, write_idx):
+    """One layer, one token. caches: per-layer slices. Returns (h, updates)."""
+    upd = {}
+    if cfg.family == "ssm":
+        xn = layers.rmsnorm(p["ssm_norm"], h, cfg.norm_eps)
+        y, upd["conv"], upd["ssm"] = ssm.ssm_decode_block(
+            cfg, p["ssm"], xn, caches["conv"], caches["ssm"])
+        return h + y, upd
+    xn = layers.rmsnorm(p["attn_norm"], h, cfg.norm_eps)
+    a, upd["k"], upd["v"] = attention.attention_decode_block(
+        cfg, p["attn"], xn, cos, sin, caches["k"], caches["v"], valid,
+        write_idx)
+    if cfg.family == "hybrid":
+        s, upd["conv"], upd["ssm"] = ssm.ssm_decode_block(
+            cfg, p["ssm"], xn, caches["conv"], caches["ssm"])
+        mixed = 0.5 * (layers.rmsnorm(p["fuse_norm_attn"], a, cfg.norm_eps)
+                       + layers.rmsnorm(p["fuse_norm_ssm"], s, cfg.norm_eps))
+        h = h + mixed
+    else:
+        h = h + a
+    if cfg.d_ff:
+        xm = layers.rmsnorm(p["mlp_norm"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe.moe_block(cfg, p["moe"], xm)
+            h = h + y
+        else:
+            h = h + layers.mlp(p["mlp"], xm)
+    return h, upd
+
+
+def decode_step(cfg, params, state: Dict[str, Any], token: jnp.ndarray
+                ) -> Tuple[Dict[str, Any], jnp.ndarray]:
+    """One sampler inner step: token (B,1) int32 -> (state', logits (B,V))."""
+    pos = state["pos"]
+    h = layers.embed(params["embed"], token)            # (B,1,D)
+    cos = sin = None
+    valid = write_idx = None
+    new_state: Dict[str, Any] = {"pos": pos + 1}
+    if cfg.has_attention:
+        p_ids = jnp.full((h.shape[0], 1), pos, jnp.int32)
+        if cfg.m_rope_sections:
+            p_ids = jnp.broadcast_to(p_ids, (3,) + p_ids.shape)
+        cos, sin = _rope_tables(cfg, p_ids)
+        C = state["k"].shape[2]
+        write_idx = pos % C
+        cache_pos = state["cache_pos"].at[write_idx].set(pos)
+        valid = cache_pos >= 0
+        if cfg.sliding_window:
+            valid &= cache_pos > pos - cfg.sliding_window
+        new_state["cache_pos"] = cache_pos
+
+    cache_keys = [k for k in ("k", "v", "conv", "ssm") if k in state]
+
+    def body(carry, xs):
+        layer_p = xs[0]
+        caches = dict(zip(cache_keys, xs[1:]))
+        if dist_ctx.mode() == "serve":
+            # resident-weight decode: the residual stream lives d_model-
+            # sharded on `model`; matmuls psum tiny (B,1,*) activations
+            # instead of streaming FSDP weight shards (§Perf llama decode)
+            carry = dist_ctx.constrain(carry, "batch", None, "dmodel")
+        y, upd = _layer_decode(cfg, layer_p, carry, cos, sin, caches, valid,
+                               write_idx)
+        return y, tuple(upd[k] for k in cache_keys)
+
+    xs = (params["layers"],) + tuple(state[k] for k in cache_keys)
+    h, updated = jax.lax.scan(body, h, xs)
+    for name, arr in zip(cache_keys, updated):
+        new_state[name] = arr
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_logits(cfg, params, h[:, 0])            # (B,V) f32
+    return new_state, logits
+
+
+# ================================================================= prefill
+def prefill(cfg, params, tokens: jnp.ndarray, gen_budget: int = 0, *,
+            positions: Optional[jnp.ndarray] = None,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            impl: str = "reference"
+            ) -> Tuple[Dict[str, Any], jnp.ndarray]:
+    """Process the prompt, build the decode state, return last-token logits.
+
+    The cache is sized for the *internal* prompt length (tokens + frontend
+    embeds + meta tokens) plus ``gen_budget`` further decode steps, capped
+    at the sliding window for SWA archs.
+    """
+    h = embed_inputs(cfg, params, tokens, extra_embeds)
+    B, P, _ = h.shape
+    if positions is None:
+        positions = default_positions(cfg, B, P)
+    cos = sin = None
+    if cfg.has_attention:
+        cos, sin = _rope_tables(cfg, positions)
+    state = init_decode_state(cfg, B, P + gen_budget)
+    C = state["k"].shape[2] if "k" in state else 0
+
+    def body(carry, layer_p):
+        hc = dist_ctx.constrain(carry, "batch", "seq", None)
+        ys = {}
+        if cfg.family == "ssm":
+            xn = layers.rmsnorm(layer_p["ssm_norm"], hc, cfg.norm_eps)
+            y, ys["conv"], ys["ssm"] = _ssm_prefill(cfg, layer_p["ssm"], xn)
+            return hc + y, ys
+        xn = layers.rmsnorm(layer_p["attn_norm"], hc, cfg.norm_eps)
+        if cfg.family == "hybrid":
+            a, k, v = attention.attention_block(cfg, layer_p["attn"], xn,
+                                                cos, sin, return_kv=True)
+            s, ys["conv"], ys["ssm"] = _ssm_prefill(cfg, layer_p["ssm"], xn)
+            mixed = 0.5 * (
+                layers.rmsnorm(layer_p["fuse_norm_attn"], a, cfg.norm_eps)
+                + layers.rmsnorm(layer_p["fuse_norm_ssm"], s, cfg.norm_eps))
+            hc = hc + mixed
+        else:
+            a, k, v = attention.attention_block(cfg, layer_p["attn"], xn,
+                                                cos, sin, return_kv=True)
+            hc = hc + a
+        ys["k"], ys["v"] = _fill_cache(k, C, P), _fill_cache(v, C, P)
+        if cfg.d_ff:
+            xm = layers.rmsnorm(layer_p["mlp_norm"], hc, cfg.norm_eps)
+            if cfg.is_moe:
+                y, _ = moe.moe_block(cfg, layer_p["moe"], xm)
+                hc = hc + y
+            else:
+                hc = hc + layers.mlp(layer_p["mlp"], xm)
+        return hc, ys
+
+    h, caches = jax.lax.scan(body, h, params["layers"])
+    for name, arr in caches.items():
+        state[name] = arr
+    state["pos"] = jnp.asarray(P, jnp.int32)
+    if cfg.has_attention:
+        slot = jnp.arange(C)
+        if P >= C:          # ring already wrapped: slot s holds token index
+            base = (slot - P % C) % C + (P - C)
+            tok_idx = jnp.where(base < P - C, base + C, base)
+            state["cache_pos"] = tok_idx.astype(jnp.int32)
+        else:
+            state["cache_pos"] = jnp.where(slot < P, slot, -1).astype(
+                jnp.int32)
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_logits(cfg, params, h[:, -1])
+    return state, logits
+
+
+def _fill_cache(kv: jnp.ndarray, C: int, P: int) -> jnp.ndarray:
+    """Place the last min(P, C) keys at their ring slots (slot = t % C)."""
+    B, _, K, hd = kv.shape
+    if P >= C:
+        tail = kv[:, P - C:]
+        return jnp.roll(tail, P % C, axis=1)
+    pad = jnp.zeros((B, C - P, K, hd), kv.dtype)
+    return jnp.concatenate([kv, pad], axis=1)
+
+
+def _ssm_prefill(cfg, p, x):
+    """Run the SSM over the prompt, return (y, conv_state, ssm_state)."""
+    di = cfg.d_inner
+    xz = layers.matmul(x, p["in_proj"])
+    xin, z = jnp.split(xz, [di], axis=-1)
+    xc = jax.nn.silu(ssm.causal_conv(p, xin).astype(jnp.float32)).astype(
+        x.dtype)
+    dt, b, c = ssm._ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((x.shape[0], di, cfg.ssm_state), jnp.float32)
+    y, h_last = ssm.selective_scan(dt, A, b, c, xc.astype(jnp.float32), h0)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = layers.matmul(y.astype(x.dtype), p["out_proj"])
+    # conv ring state = the last (conv-1) raw inputs, left-padded if short
+    lpad = max(0, (cfg.ssm_conv - 1) - x.shape[1])
+    xin_p = jnp.pad(xin, ((0, 0), (lpad, 0), (0, 0)))
+    conv_state = xin_p[:, xin_p.shape[1] - (cfg.ssm_conv - 1):]
+    return out, conv_state, h_last

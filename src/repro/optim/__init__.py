@@ -1,0 +1,8 @@
+from repro.optim.adam import adam, apply_updates  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+)
+from repro.optim.sgd import sgd  # noqa: F401

@@ -1,0 +1,76 @@
+"""Adam / AdamW on pytrees (no optax; optimizer state is a plain pytree).
+
+The optimizer moments inherit the *sharding* of the parameters under jit, so
+FSDP-sharded params automatically give FSDP-sharded optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _lr_at(lr: Schedule, step) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         moment_dtype: Optional[str] = None) -> Optimizer:
+    """AdamW. Moments stored in ``moment_dtype`` (default: param dtype)."""
+
+    def init(params):
+        def zeros_like(p):
+            dt = jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros_like, params),
+                         jax.tree.map(zeros_like, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), m2.astype(m.dtype), \
+                v2.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

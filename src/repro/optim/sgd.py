@@ -1,0 +1,34 @@
+"""SGD with optional momentum (used by ablations / DDPG target baselines)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adam import Optimizer, _lr_at, Schedule
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Any
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        vel = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SgdState(jnp.zeros((), jnp.int32), vel)
+
+    def update(grads, state, params):
+        del params
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            vel = jax.tree.map(lambda v, g: momentum * v + g,
+                               state.velocity, grads)
+            updates = jax.tree.map(lambda v: -lr_t * v, vel)
+            return updates, SgdState(step, vel)
+        updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, SgdState(step, None)
+
+    return Optimizer(init=init, update=update)

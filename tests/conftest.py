@@ -1,0 +1,24 @@
+"""Shared pytest fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests
+and benches must see the real single CPU device; only launch/dryrun.py (run
+as its own process) materialises the 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+def assert_trees_close(a, b, atol=1e-5, rtol=1e-5):
+    for xa, xb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(xa, np.float32),
+                                   np.asarray(xb, np.float32),
+                                   atol=atol, rtol=rtol)

@@ -1,0 +1,83 @@
+"""Queue semantics (the paper's policy/experience queues) + replay buffer."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queues import Experience, ExperienceQueue, PolicyStore
+from repro.data.replay import add_batch, init_replay, sample
+
+
+def test_policy_store_latest_wins():
+    store = PolicyStore({"w": 0})
+    assert store.read() == ({"w": 0}, 0)
+    for i in range(1, 5):
+        store.publish({"w": i})
+    params, version = store.read()
+    assert params == {"w": 4} and version == 4
+
+
+def test_policy_store_thread_safety():
+    store = PolicyStore(0)
+
+    def writer():
+        for _ in range(200):
+            store.publish(store.read()[0])
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.version == 800
+
+
+def test_experience_queue_staleness_accounting():
+    q = ExperienceQueue()
+    q.put(Experience(traj={}, policy_version=3, sampler_id=0,
+                     collect_seconds=0.1))
+    q.put(Experience(traj={}, policy_version=5, sampler_id=1,
+                     collect_seconds=0.1))
+    q.get(learner_version=5)
+    q.get(learner_version=6)
+    assert q.staleness == [2, 1]
+    assert q.mean_staleness() == pytest.approx(1.5)
+
+
+def test_experience_queue_drain_bounded():
+    q = ExperienceQueue()
+    for i in range(5):
+        q.put(Experience({}, i, 0, 0.0))
+    items = q.drain(learner_version=10, max_items=3)
+    assert len(items) == 3 and q.qsize() == 2
+
+
+# ---------------------------------------------------------------- replay
+@settings(max_examples=15, deadline=None)
+@given(cap=st.integers(4, 32), n1=st.integers(1, 40), n2=st.integers(1, 40))
+def test_replay_ring_size_and_wrap(cap, n1, n2):
+    ex = {"x": jnp.zeros((1, 2))}
+    state = init_replay(cap, ex)
+    state = add_batch(state, {"x": jnp.ones((n1, 2))})
+    state = add_batch(state, {"x": 2 * jnp.ones((n2, 2))})
+    assert int(state.size) == min(cap, n1 + n2)
+    assert 0 <= int(state.index) < cap
+
+
+def test_replay_overwrites_oldest():
+    state = init_replay(4, {"x": jnp.zeros((1,))})
+    state = add_batch(state, {"x": jnp.arange(4.0)})
+    state = add_batch(state, {"x": jnp.asarray([9.0, 10.0])})
+    vals = set(np.asarray(state.storage["x"]).tolist())
+    assert vals == {9.0, 10.0, 2.0, 3.0}
+
+
+def test_replay_sample_within_filled():
+    state = init_replay(16, {"x": jnp.zeros((1,))})
+    state = add_batch(state, {"x": jnp.arange(1.0, 7.0)})
+    out = sample(state, jax.random.PRNGKey(0), 64)
+    assert out["x"].shape == (64,)
+    assert set(np.asarray(out["x"]).tolist()) <= set(range(1, 7))

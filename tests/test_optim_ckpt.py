@@ -1,0 +1,100 @@
+"""Optimizer math + checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint
+from repro.optim import (adam, apply_updates, clip_by_global_norm,
+                         cosine_decay, global_norm, linear_warmup_cosine,
+                         sgd)
+
+
+def test_adam_matches_reference_math():
+    lr, b1, b2, eps = 0.1, 0.9, 0.999, 1e-8
+    opt = adam(lr, b1, b2, eps)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    state = opt.init(p)
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    m = v = np.zeros(2)
+    ref = np.asarray([1.0, -2.0])
+    for t in range(1, 4):
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+        m = b1 * m + (1 - b1) * np.asarray(g["w"])
+        v = b2 * v + (1 - b2) * np.asarray(g["w"]) ** 2
+        ref = ref - lr * (m / (1 - b1 ** t)) / (
+            np.sqrt(v / (1 - b2 ** t)) + eps)
+    np.testing.assert_allclose(np.asarray(p["w"]), ref, rtol=1e-5)
+
+
+def test_adam_converges_quadratic():
+    opt = adam(0.1)
+    p = {"w": jnp.asarray(5.0)}
+    state = opt.init(p)
+    for _ in range(300):
+        g = jax.grad(lambda q: (q["w"] - 2.0) ** 2)(p)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+    assert abs(float(p["w"]) - 2.0) < 1e-2
+
+
+def test_sgd_momentum_direction():
+    opt = sgd(0.1, momentum=0.9)
+    p = jnp.asarray(1.0)
+    state = opt.init(p)
+    upd1, state = opt.update(jnp.asarray(1.0), state, p)
+    upd2, state = opt.update(jnp.asarray(1.0), state, p)
+    assert float(upd2) < float(upd1) < 0       # momentum accumulates
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=8),
+       st.floats(0.1, 10))
+def test_clip_global_norm_bound(vals, max_norm):
+    tree = {"a": jnp.asarray(vals)}
+    clipped, norm = clip_by_global_norm(tree, max_norm)
+    assert float(global_norm(clipped)) <= max_norm * (1 + 1e-4)
+    if float(norm) <= max_norm:     # below threshold -> untouched
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(tree["a"]), rtol=1e-5)
+
+
+def test_schedules_monotone_shapes():
+    cos = cosine_decay(1.0, 100)
+    assert float(cos(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+    wc = linear_warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(wc(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0)
+
+
+def test_checkpoint_roundtrip(tmp_path, rng_key):
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("hymba-1.5b").reduced()
+    params = T.init_params(cfg, rng_key)
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, 7, params, metadata={"arch": cfg.name})
+    template = jax.tree.map(jnp.zeros_like, params)
+    restored = checkpoint.restore(path, template)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    assert checkpoint.load_metadata(path)["arch"] == cfg.name
+    assert checkpoint.latest_step(path) == 7
+
+
+def test_checkpoint_keep_last_k(tmp_path):
+    path = str(tmp_path / "ckpt")
+    for step in range(5):
+        checkpoint.save(path, step, {"w": jnp.asarray(float(step))}, keep=2)
+    steps = [checkpoint.latest_step(path)]
+    assert steps == [4]
+    names = sorted(os.listdir(path))
+    assert len(names) == 2

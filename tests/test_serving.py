@@ -1,0 +1,59 @@
+"""Wave-scheduled batch serving: queue semantics + completion accounting."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.serving import Request, SlotServer
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _server(slots=3, prompt_len=6, max_new=5, eos=None):
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    params = T.init_params(cfg, KEY)
+    return cfg, SlotServer(cfg, params, slots=slots, prompt_len=prompt_len,
+                           max_new_tokens=max_new, eos_id=eos)
+
+
+def test_all_requests_complete():
+    cfg, server = _server()
+    for i in range(7):              # 7 requests on 3 slots -> 3 waves
+        prompt = jax.random.randint(jax.random.PRNGKey(i), (6,), 0,
+                                    cfg.vocab_size)
+        server.submit(Request(request_id=i, prompt=prompt,
+                              max_new_tokens=5))
+    completions = server.run()
+    assert sorted(c.request_id for c in completions) == list(range(7))
+    for c in completions:
+        assert 1 <= len(c.tokens) <= 5
+        assert c.latency > 0 and c.queue_wait >= 0
+
+
+def test_eos_stops_early_and_counts_waste():
+    cfg, server = _server(slots=2, max_new=30, eos=0)
+    for i in range(2):
+        prompt = jax.random.randint(jax.random.PRNGKey(10 + i), (6,), 0,
+                                    cfg.vocab_size)
+        server.submit(Request(request_id=i, prompt=prompt,
+                              max_new_tokens=30))
+    completions = server.run()
+    assert len(completions) == 2
+    for c in completions:
+        # reduced vocab 512, random logits: eos=0 should hit before 30 with
+        # decent probability; either way tokens never exceed the budget
+        assert len(c.tokens) <= 30
+        if len(c.tokens) < 30:
+            assert c.tokens[-1] == 0
+    assert server.decode_steps >= 1
+
+
+def test_per_request_budget_respected():
+    cfg, server = _server(slots=2, max_new=8)
+    p = jnp.zeros((6,), jnp.int32)
+    server.submit(Request(request_id=0, prompt=p, max_new_tokens=2))
+    server.submit(Request(request_id=1, prompt=p, max_new_tokens=8))
+    completions = {c.request_id: c for c in server.run()}
+    assert len(completions[0].tokens) == 2
+    assert len(completions[1].tokens) == 8
+    assert server.wasted_slot_steps > 0     # request 0 rode out the wave

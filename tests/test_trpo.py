@@ -1,0 +1,68 @@
+"""TRPO invariants: CG solves, FVP is PSD, KL constraint holds, learning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs
+from repro.algos.trpo import (TRPOConfig, _dist, _flatten, conjugate_gradient,
+                              fisher_vp, make_trpo_learner, mean_kl,
+                              trpo_update)
+from repro.core import sampler as sampler_mod
+from repro.models import mlp_policy
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup():
+    env = envs.make("pendulum")
+    params = mlp_policy.init_policy(KEY, env.obs_dim, env.act_dim, 16)
+    rollout = jax.jit(sampler_mod.make_env_rollout(env, 64))
+    carry = sampler_mod.init_env_carry(env, jax.random.PRNGKey(1), 8)
+    _, traj = rollout(params, carry)
+    return env, params, traj
+
+
+def test_cg_solves_spd_system():
+    a = jax.random.normal(KEY, (12, 12))
+    spd = a @ a.T + 0.5 * jnp.eye(12)
+    b = jax.random.normal(jax.random.PRNGKey(1), (12,))
+    x = conjugate_gradient(lambda v: spd @ v, b, iters=24)
+    np.testing.assert_allclose(np.asarray(spd @ x), np.asarray(b),
+                               atol=1e-3)
+
+
+def test_fisher_vp_psd_and_symmetric():
+    env, params, traj = _setup()
+    pi = {"pi": params["pi"], "log_std": params["log_std"]}
+    obs = traj["obs"].reshape(-1, env.obs_dim)
+    om, os_ = _dist(pi, obs)
+    flat, meta = _flatten(pi)
+    avp = lambda v: fisher_vp(pi, obs, om, os_, v, meta, damping=0.0)
+    k1, k2 = jax.random.split(KEY)
+    v = jax.random.normal(k1, flat.shape)
+    w = jax.random.normal(k2, flat.shape)
+    assert float(jnp.dot(v, avp(v))) >= -1e-5                  # PSD
+    np.testing.assert_allclose(float(jnp.dot(w, avp(v))),      # symmetric
+                               float(jnp.dot(v, avp(w))), rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_kl_zero_at_same_params():
+    env, params, traj = _setup()
+    pi = {"pi": params["pi"], "log_std": params["log_std"]}
+    obs = traj["obs"].reshape(-1, env.obs_dim)
+    om, os_ = _dist(pi, obs)
+    assert float(mean_kl(pi, om, os_, obs)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_trpo_update_respects_trust_region_and_improves():
+    env, params, traj = _setup()
+    cfg = TRPOConfig(max_kl=0.01)
+    learn = make_trpo_learner(cfg)
+    new_params, _, metrics = learn(params, None, traj)
+    assert float(metrics["kl"]) <= 1.5 * cfg.max_kl + 1e-6
+    assert float(metrics["surrogate_gain"]) >= 0.0
+    moved = any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(
+        jax.tree.leaves(params["pi"]), jax.tree.leaves(new_params["pi"])))
+    assert moved or float(metrics["step_coef"]) == 0.0

@@ -1,0 +1,46 @@
+"""Running-normalization invariants (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.envs.wrappers import (init_norm, merge_norm_states,
+                                 normalize_obs, update_norm)
+
+arrays = st.lists(
+    st.lists(st.floats(-50, 50, allow_nan=False, width=32),
+             min_size=3, max_size=3),
+    min_size=2, max_size=30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays)
+def test_update_matches_full_batch_stats(rows):
+    data = jnp.asarray(rows)
+    state = init_norm(3)
+    state = update_norm(state, data)
+    np.testing.assert_allclose(np.asarray(state.mean),
+                               np.mean(rows, axis=0), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state.var),
+                               np.var(rows, axis=0), atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays, arrays)
+def test_shard_merge_equals_concat(rows_a, rows_b):
+    """merge(stats(A), stats(B)) == stats(A ++ B) — what lets each WALL-E
+    sampler shard keep local statistics."""
+    a = update_norm(init_norm(3), jnp.asarray(rows_a))
+    b = update_norm(init_norm(3), jnp.asarray(rows_b))
+    merged = merge_norm_states(a, b)
+    both = update_norm(init_norm(3), jnp.asarray(rows_a + rows_b))
+    np.testing.assert_allclose(np.asarray(merged.mean),
+                               np.asarray(both.mean), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(merged.var),
+                               np.asarray(both.var), rtol=1e-2, atol=1e-2)
+
+
+def test_normalize_clips():
+    state = init_norm(2)
+    state = update_norm(state, jnp.asarray([[0.0, 0.0], [2.0, 2.0]]))
+    out = normalize_obs(state, jnp.asarray([1e6, -1e6]), clip=5.0)
+    assert float(jnp.max(jnp.abs(out))) <= 5.0
