@@ -15,6 +15,8 @@ import jax
 from repro import envs
 from repro.algos.ppo import PPOConfig, make_mlp_learner
 from repro.core import sampler as sampler_mod
+from repro.core.backends import make_backend
+from repro.core.fused import FusedRunner
 from repro.core.orchestrator import SyncRunner
 from repro.models import mlp_policy
 from repro.optim import adam
@@ -29,9 +31,11 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def build_walle(env_name: str, num_samplers: int, total_samples: int,
-                env_batch: int = 8, seed: int = 0):
+                env_batch: int = 8, seed: int = 0,
+                backend: str = "inline", chunk=None):
     """The paper's setup: PPO + MLP policy + N samplers splitting a fixed
-    per-iteration sample budget (20000 in the paper)."""
+    per-iteration sample budget (20000 in the paper), scheduled by the
+    selected SamplerBackend — or the fused single-dispatch engine."""
     env = envs.make(env_name)
     key = jax.random.PRNGKey(seed)
     params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 64)
@@ -39,14 +43,19 @@ def build_walle(env_name: str, num_samplers: int, total_samples: int,
     learn = make_mlp_learner(opt, PPOConfig(epochs=4, minibatches=4))
     per_sampler = total_samples // num_samplers
     horizon = max(1, per_sampler // env_batch)
+    if backend == "fused":
+        carry = sampler_mod.init_env_carry(
+            env, jax.random.PRNGKey(seed + 1), env_batch * num_samplers)
+        return FusedRunner(env, learn, params, opt.init(params), carry,
+                           horizon=horizon, chunk=chunk)
     rollout = sampler_mod.make_env_rollout(env, horizon)
     carries = [
         sampler_mod.init_env_carry(env, jax.random.PRNGKey(seed + 1 + i),
                                    env_batch)
         for i in range(num_samplers)
     ]
-    return SyncRunner(rollout, learn, params, opt.init(params), carries,
-                      num_samplers)
+    bk = make_backend(backend, rollout, carries, env=env, horizon=horizon)
+    return SyncRunner(None, learn, params, opt.init(params), backend=bk)
 
 
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

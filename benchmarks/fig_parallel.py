@@ -20,6 +20,11 @@ from benchmarks.common import build_walle, emit
 
 NS = (1, 2, 4, 8, 10)
 
+# SamplerBackend the figure harness schedules collection with ("inline"
+# reproduces the paper's single-host measurement; "threaded"/"sharded"
+# measure real concurrency on multi-core/multi-device hosts).
+BACKEND = "inline"
+
 
 def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
                        per_sampler: int = 2048) -> Dict:
@@ -34,7 +39,7 @@ def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
     out = {}
     for n in (1, 10):
         runner = build_walle(env_name, n, per_sampler * n, env_batch=8,
-                             seed=42)
+                             seed=42, backend=BACKEND)
         logs = runner.run(iterations)
         rets = [l.mean_return for l in logs if l.mean_return != 0.0]
         out[f"N={n}"] = {
@@ -59,7 +64,8 @@ def fig4_rollout_time(env_name: str = "cheetah", budget: int = 4096,
                       iterations: int = 3) -> Dict[int, float]:
     times = {}
     for n in NS:
-        runner = build_walle(env_name, n, budget, env_batch=8, seed=7)
+        runner = build_walle(env_name, n, budget, env_batch=8, seed=7,
+                             backend=BACKEND)
         logs = runner.run(iterations)
         # skip iteration 0 (jit compile)
         ts = [l.collect_time for l in logs[1:]]
@@ -82,7 +88,8 @@ def fig6_fig7_time_split(env_name: str = "cheetah", budget: int = 4096,
                          iterations: int = 3) -> Dict:
     out = {}
     for n in NS:
-        runner = build_walle(env_name, n, budget, env_batch=8, seed=13)
+        runner = build_walle(env_name, n, budget, env_batch=8, seed=13,
+                             backend=BACKEND)
         logs = runner.run(iterations)
         collect = sum(l.collect_time for l in logs[1:])
         learn = sum(l.learn_time for l in logs[1:])

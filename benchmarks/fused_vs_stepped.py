@@ -1,0 +1,77 @@
+"""Dispatch-overhead microbench: fused engine vs stepped runner.
+
+At small batch the device work per iteration is tiny, so the stepped
+runner's per-iteration cost is dominated by host overhead: one dispatch +
+block per sampler rollout, a host-side merge, one dispatch + block for the
+learner update. The fused engine pays one dispatch per *chunk* of
+iterations, so its per-iteration host overhead is that cost divided by the
+chunk length (DESIGN.md §2).
+
+Rows:
+  fused_vs_stepped_inline_us      per-iteration wall time, stepped inline
+  fused_vs_stepped_fused_us       per-iteration wall time, fused chunk
+  fused_vs_stepped_overhead       host-overhead ratio (>= 2x is the
+                                  acceptance bar; typically far higher)
+
+  PYTHONPATH=src python benchmarks/fused_vs_stepped.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import build_walle, emit
+
+ENV = "pendulum"
+BATCH = 4          # small batch: dispatch dominates device work
+HORIZON = 32
+ITERS = 32
+
+
+def _timed_run(runner, iterations: int) -> float:
+    """Wall time per iteration, excluding the compile-bearing first run.
+
+    The warmup run uses the same iteration count so the fused runner's
+    chunk-length-``iterations`` scan is compiled before the timed run.
+    """
+    runner.run(iterations)                     # warmup / compile
+    t0 = time.perf_counter()
+    runner.run(iterations)
+    return (time.perf_counter() - t0) / iterations
+
+
+def run_all() -> dict:
+    total = BATCH * HORIZON
+    stepped = build_walle(ENV, 1, total, env_batch=BATCH, seed=0,
+                          backend="inline")
+    t_stepped = _timed_run(stepped, ITERS)
+
+    fused = build_walle(ENV, 1, total, env_batch=BATCH, seed=0,
+                        backend="fused", chunk=ITERS)
+    t_fused = _timed_run(fused, ITERS)
+
+    # The fused chunk is ~pure device time (one dispatch amortized over
+    # ITERS iterations), so it bounds the per-iteration device compute;
+    # everything the stepped path pays on top of it is host overhead.
+    overhead_stepped = max(t_stepped - t_fused, 1e-12)
+    overhead_fused = max(t_fused / ITERS, 1e-12)   # one dispatch / chunk
+    ratio = t_stepped / t_fused
+
+    emit("fused_vs_stepped_inline_us", t_stepped * 1e6,
+         f"batch={BATCH} horizon={HORIZON}")
+    emit("fused_vs_stepped_fused_us", t_fused * 1e6,
+         f"chunk={ITERS} (1 dispatch)")
+    emit("fused_vs_stepped_overhead", overhead_stepped * 1e6,
+         f"x{ratio:.1f} lower per-iteration time fused vs stepped "
+         f"(>=2x bar: {'PASS' if ratio >= 2.0 else 'FAIL'})")
+    return {"stepped_s": t_stepped, "fused_s": t_fused, "ratio": ratio,
+            "overhead_stepped_s": overhead_stepped,
+            "overhead_fused_s": overhead_fused}
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    out = run_all()
+    assert out["ratio"] >= 2.0, (
+        f"fused engine only x{out['ratio']:.2f} faster per iteration")

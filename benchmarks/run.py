@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig5_*  collection speedup vs N              (paper Fig 5)
   fig6_*  learning-time fraction vs N          (paper Fig 6)
   fig7_*  learning time per iteration vs N     (paper Fig 7)
+  fused_vs_stepped_*  fused-engine dispatch-overhead savings
   attn_* / selective_scan_* / decode_step_*    sampler hot-spot microbenches
   roofline_*  three-term roofline per (arch x shape x mesh)  [§Roofline]
 
@@ -18,8 +19,10 @@ from __future__ import annotations
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import fig_parallel, kernel_bench, roofline
+    from benchmarks import fig_parallel, fused_vs_stepped, kernel_bench, \
+        roofline
     fig_parallel.run_all()
+    fused_vs_stepped.run_all()
     kernel_bench.run_all()
     roofline.main()
 

@@ -10,7 +10,7 @@ import jax
 
 from repro import envs
 from repro.algos.ppo import PPOConfig, make_mlp_learner
-from repro.core import AsyncOrchestrator, SyncRunner
+from repro.core import AsyncOrchestrator, SyncRunner, make_backend
 from repro.core import sampler as S
 from repro.models import mlp_policy
 from repro.optim import adam
@@ -19,7 +19,7 @@ N = 3
 UPDATES = 6
 
 
-def build(cls, **kw):
+def build(cls, backend=None, **kw):
     env = envs.make("cartpole")
     key = jax.random.PRNGKey(0)
     params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 32)
@@ -28,11 +28,16 @@ def build(cls, **kw):
     rollout = S.make_env_rollout(env, horizon=128)
     carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), 8)
                for i in range(N)]
+    if backend is not None:
+        return cls(None, learn, params, opt.init(params),
+                   backend=make_backend(backend, rollout, carries), **kw)
     return cls(rollout, learn, params, opt.init(params), carries, N, **kw)
 
 
 if __name__ == "__main__":
-    sync = build(SyncRunner)
+    # the sync baseline timed with the threaded backend, so its collection
+    # fan-out matches the async runtime's sampler threads 1:1
+    sync = build(SyncRunner, backend="threaded")
     t0 = time.perf_counter()
     sync_logs = sync.run(UPDATES)
     t_sync = time.perf_counter() - t0

@@ -2,7 +2,8 @@
 
 PPO on a pure-JAX pendulum with N=4 parallel samplers vs N=1, printing the
 per-iteration collection/learning split — the paper's Figs 3/6 story in
-~2 minutes on CPU.
+~2 minutes on CPU — then the fused engine: the same iterations under a
+single jit dispatch (no host round-trips at all).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,30 +11,49 @@ import jax
 
 from repro import envs
 from repro.algos.ppo import PPOConfig, make_mlp_learner
-from repro.core import SyncRunner
+from repro.core import FusedRunner, SyncRunner, make_backend
 from repro.core import sampler as S
 from repro.models import mlp_policy
 from repro.optim import adam
 
 
-def run(num_samplers: int, iterations: int = 8):
+def setup(num_samplers: int, batch: int = 8, horizon: int = 200):
     env = envs.make("pendulum")
     key = jax.random.PRNGKey(0)
     params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 64)
     opt = adam(1e-3)
     learn = make_mlp_learner(opt, PPOConfig(epochs=4, minibatches=4))
-    rollout = S.make_env_rollout(env, horizon=200)
-    carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), 8)
+    rollout = S.make_env_rollout(env, horizon)
+    carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), batch)
                for i in range(num_samplers)]
-    runner = SyncRunner(rollout, learn, params, opt.init(params), carries,
-                        num_samplers)
+    return env, rollout, learn, params, opt.init(params), carries
+
+
+def run(num_samplers: int, iterations: int = 8, backend: str = "inline"):
+    env, rollout, learn, params, opt_state, carries = setup(num_samplers)
+    runner = SyncRunner(None, learn, params, opt_state,
+                        backend=make_backend(backend, rollout, carries,
+                                             env=env, horizon=200))
     logs = runner.run(iterations)
-    print(f"\n=== N={num_samplers} parallel samplers ===")
+    print(f"\n=== N={num_samplers} parallel samplers ({backend}) ===")
     for log in logs:
         print(f"iter {log.iteration}: return={log.mean_return:8.1f}  "
               f"collect={log.collect_time:.3f}s "
               f"(serial-equivalent {log.collect_time_serial:.3f}s)  "
               f"learn={log.learn_time:.3f}s  samples={log.samples}")
+    return logs
+
+
+def run_fused(iterations: int = 8):
+    env, _, learn, params, opt_state, carries = setup(1)
+    runner = FusedRunner(env, learn, params, opt_state, carries[0],
+                         horizon=200, chunk=iterations)
+    runner.run(iterations)                 # compile the chunk once
+    logs = runner.run(iterations)[iterations:]
+    print(f"\n=== fused engine (1 dispatch for {iterations} iterations) ===")
+    for log in logs:
+        print(f"iter {log.iteration}: return={log.mean_return:8.1f}  "
+              f"iter_time={log.learn_time:.3f}s  samples={log.samples}")
     return logs
 
 
@@ -48,3 +68,11 @@ if __name__ == "__main__":
           "samples vs", sum(l.samples for l in one), "for N=1 in that "
           "time — more experience per wall-clock iteration is the paper's "
           "Fig 3 claim")
+    fused = run_fused()
+    t_f = sum(l.learn_time for l in fused) / len(fused)
+    t_s = sum(l.collect_time + l.learn_time for l in one[1:]) / (len(one) - 1)
+    print(f"\nfused whole-iteration time {t_f:.3f}s/iter vs stepped "
+          f"{t_s:.3f}s/iter at this batch; the fused engine's single "
+          f"dispatch per chunk pays off as per-iteration device work "
+          f"shrinks (see benchmarks/fused_vs_stepped.py for the "
+          f"dispatch-bound regime)")

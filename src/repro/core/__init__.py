@@ -1,6 +1,23 @@
 # The paper's primary contribution: WALL-E's parallel-sampler architecture
-# (N rollout samplers + async agent/learner + policy & experience queues).
-from repro.core import orchestrator, queues, sampler, timing  # noqa: F401
+# (N rollout samplers + async agent/learner + policy & experience queues),
+# behind a pluggable SamplerBackend seam with a fused single-dispatch engine.
+from repro.core import (  # noqa: F401
+    backends,
+    fused,
+    orchestrator,
+    queues,
+    sampler,
+    timing,
+)
+from repro.core.backends import (  # noqa: F401
+    CollectStats,
+    InlineBackend,
+    SamplerBackend,
+    ShardedBackend,
+    ThreadedBackend,
+    make_backend,
+)
+from repro.core.fused import FusedRunner, TrainState, make_fused_train_loop  # noqa: F401
 from repro.core.orchestrator import (  # noqa: F401
     AsyncOrchestrator,
     IterationLog,

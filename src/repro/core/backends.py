@@ -1,0 +1,186 @@
+"""Sampler backends — the pluggable experience-collection seam.
+
+WALL-E's runtime layer separates *what* a sampler does (one jitted rollout,
+``core/sampler.py``) from *how* N of them are scheduled. A
+``SamplerBackend`` owns the sampler carries and produces, per iteration,
+one merged trajectory plus per-sampler timing (DESIGN.md §2). Runners
+(``core/orchestrator.py``) and the fused engine (``core/fused.py``) are
+thin drivers over this protocol.
+
+Backends:
+
+* ``InlineBackend``   — the serial N-sampler sweep: each sampler's rollout
+  runs back-to-back on the local device and is timed individually, so the
+  critical path of a truly parallel deployment (max over samplers) can be
+  reported from a single host.
+* ``ThreadedBackend`` — the fan-out/join form of ``AsyncOrchestrator``'s
+  sampler loops: each sampler's jitted rollout is dispatched from its own
+  thread (JAX releases the GIL during device execution), then joined and
+  merged.
+* ``ShardedBackend``  — the accelerator-native form: ``shard_map`` places
+  one sampler per ``data``-axis mesh slice; the trajectory is *born
+  sharded* and never merged on host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, List, Optional, Protocol, Sequence
+
+import jax
+
+from repro.data import trajectory
+
+
+@dataclasses.dataclass
+class CollectStats:
+    """Per-iteration collection accounting shared by every backend."""
+    per_sampler_seconds: List[float]
+    samples: int
+
+    @property
+    def critical_path(self) -> float:
+        """Max over samplers — what a parallel deployment would wait."""
+        return max(self.per_sampler_seconds)
+
+    @property
+    def serial_equivalent(self) -> float:
+        """Sum over samplers — what N=1 pays for the same experience."""
+        return sum(self.per_sampler_seconds)
+
+
+class SamplerBackend(Protocol):
+    """collect(params) -> (merged_traj, stats); carries are backend-owned."""
+
+    num_samplers: int
+
+    def collect(self, params: Any) -> tuple:
+        ...
+
+
+def timed_rollout(rollout: Callable, params: Any, carry: Any):
+    """Run one jitted rollout to completion, returning (carry', traj, dt)."""
+    t0 = time.perf_counter()
+    carry, traj = rollout(params, carry)
+    traj = jax.block_until_ready(traj)
+    return carry, traj, time.perf_counter() - t0
+
+
+def merge_trajs(trajs: Sequence[Any]) -> Any:
+    return trajectory.merge(list(trajs)) if len(trajs) > 1 else trajs[0]
+
+
+# ================================================================== inline
+class InlineBackend:
+    """Today's serial sweep: N logical samplers executed back-to-back."""
+
+    def __init__(self, rollout: Callable, carries: List[Any]):
+        self.rollout = jax.jit(rollout)
+        self.carries = carries
+        self.num_samplers = len(carries)
+
+    def collect(self, params):
+        trajs, times = [], []
+        for i in range(self.num_samplers):
+            self.carries[i], traj, dt = timed_rollout(
+                self.rollout, params, self.carries[i])
+            trajs.append(traj)
+            times.append(dt)
+        merged = merge_trajs(trajs)
+        return merged, CollectStats(times, trajectory.num_samples(merged))
+
+
+# ================================================================ threaded
+class ThreadedBackend:
+    """Fan-out/join over sampler threads (AsyncOrchestrator's sampler loop,
+    made synchronous): each sampler dispatches its jitted rollout from its
+    own thread; the critical path is genuinely the max over samplers."""
+
+    def __init__(self, rollout: Callable, carries: List[Any],
+                 max_workers: Optional[int] = None):
+        self.rollout = jax.jit(rollout)
+        self.carries = carries
+        self.num_samplers = len(carries)
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers or self.num_samplers)
+
+    def _one(self, i: int, params):
+        self.carries[i], traj, dt = timed_rollout(
+            self.rollout, params, self.carries[i])
+        return traj, dt
+
+    def collect(self, params):
+        futures = [self._pool.submit(self._one, i, params)
+                   for i in range(self.num_samplers)]
+        results = [f.result() for f in futures]
+        trajs = [r[0] for r in results]
+        times = [r[1] for r in results]
+        merged = merge_trajs(trajs)
+        return merged, CollectStats(times, trajectory.num_samples(merged))
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+
+
+# ================================================================= sharded
+class ShardedBackend:
+    """One sampler per ``data``-axis mesh slice via ``make_sharded_rollout``.
+
+    The carry holds the *global* env batch; shard_map splits it so each
+    slice runs an independent sampler and the trajectory arrays come back
+    already concatenated on the (sharded) batch axis — no host merge. One
+    dispatch covers all samplers, so per-sampler time equals the critical
+    path and there is no serial/parallel gap to report.
+    """
+
+    def __init__(self, sharded_rollout: Callable, carry: Any, mesh,
+                 data_axis: str = "data"):
+        self.rollout = jax.jit(sharded_rollout)
+        self.carry = carry
+        self.mesh = mesh
+        self.num_samplers = mesh.shape[data_axis]
+
+    def collect(self, params):
+        with jax.sharding.use_mesh(self.mesh) if hasattr(
+                jax.sharding, "use_mesh") else self.mesh:
+            self.carry, traj, dt = timed_rollout(
+                self.rollout, params, self.carry)
+        stats = CollectStats([dt], trajectory.num_samples(traj))
+        return traj, stats
+
+
+def make_backend(kind: str, rollout: Callable, carries: List[Any],
+                 env=None, horizon: Optional[int] = None, mesh=None):
+    """Factory used by launch/train.py and examples.
+
+    ``inline`` / ``threaded`` take the per-sampler ``carries`` list;
+    ``sharded`` builds its mesh over the host's devices and a single global
+    carry (the caller passes ``carries`` whose batches it concatenates).
+    """
+    if kind == "inline":
+        return InlineBackend(rollout, carries)
+    if kind == "threaded":
+        return ThreadedBackend(rollout, carries)
+    if kind == "sharded":
+        import numpy as np
+        from jax.sharding import Mesh
+        from repro.core import sampler as sampler_mod
+        assert env is not None and horizon is not None
+        batch = sum(c[1].shape[0] for c in carries)
+        if mesh is None:
+            devs = np.asarray(jax.devices())
+            assert batch % len(devs) == 0, (
+                f"sharded backend: global env batch {batch} not divisible "
+                f"by the {len(devs)} available devices; adjust "
+                f"--global-batch or pass an explicit mesh")
+            mesh = Mesh(devs.reshape(len(devs), 1), ("data", "model"))
+        else:
+            assert batch % mesh.shape["data"] == 0, (
+                f"sharded backend: global env batch {batch} not divisible "
+                f"by mesh data axis {mesh.shape['data']}")
+        sharded = sampler_mod.make_sharded_rollout(env, horizon, mesh)
+        carry = jax.tree.map(
+            lambda *xs: jax.numpy.concatenate(xs, axis=0), *carries)
+        return ShardedBackend(sharded, carry, mesh)
+    raise ValueError(f"unknown backend {kind!r}")

@@ -1,0 +1,129 @@
+"""The fused engine: collect -> GAE -> PPO, one dispatch per chunk.
+
+The stepped runners pay a host<->device round-trip per sampler per
+iteration (dispatch the rollout, block, merge, dispatch the update, block).
+On the workloads the paper measures that dispatch overhead is pure loss —
+rollout, GAE and the minibatched PPO update are all jittable already. The
+fused engine rolls the *entire* iteration into the body of one
+``lax.scan`` over ``chunk`` iterations under a single ``jit`` with donated
+buffers, so the whole collect->learn loop stays resident on the device and
+the host pays one dispatch per chunk instead of ~2N per iteration
+(DESIGN.md §2).
+
+``make_fused_train_loop`` builds the raw jitted chunk function;
+``FusedRunner`` wraps it in the runner interface (``run`` ->
+``IterationLog`` list) so launch/examples/benchmarks treat it like any
+other backend.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampler as sampler_mod
+from repro.data import trajectory
+
+
+class TrainState(NamedTuple):
+    """Everything the fused loop carries across iterations, device-side."""
+    params: Any
+    opt_state: Any
+    env_carry: Any
+
+
+def make_fused_train_loop(env, learn: Callable, horizon: int,
+                          chunk: int) -> Callable:
+    """Build ``train_chunk(state) -> (state', metrics)``.
+
+    ``learn`` is a jittable ``(params, opt_state, traj) -> (params,
+    opt_state, metrics)`` (e.g. ``make_mlp_learner``: GAE + epochs of
+    minibatched PPO). One call runs ``chunk`` full collect->learn
+    iterations on device; metrics come back stacked ``(chunk, ...)`` with
+    per-iteration ``mean_return``. The state argument is donated, so
+    params/optimizer/env buffers are updated in place across chunks.
+    """
+    rollout = sampler_mod.make_env_rollout(env, horizon)
+
+    def one_iteration(state: TrainState, _):
+        env_carry, traj = rollout(state.params, state.env_carry)
+        params, opt_state, metrics = learn(state.params, state.opt_state,
+                                           traj)
+        metrics = dict(metrics)
+        metrics["mean_return"] = trajectory.episode_returns(traj)
+        return TrainState(params, opt_state, env_carry), metrics
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def train_chunk(state: TrainState):
+        return jax.lax.scan(one_iteration, state, None, length=chunk)
+
+    return train_chunk
+
+
+class FusedRunner:
+    """Runner-shaped driver over the fused loop.
+
+    The fused engine has no host-visible collect/learn boundary — that is
+    the point — so ``IterationLog.collect_time``/``collect_time_serial``
+    are 0.0 and ``learn_time`` carries the whole fused iteration's share
+    of the chunk's wall time (DESIGN.md §2).
+    """
+
+    def __init__(self, env, learn: Callable, params: Any, opt_state: Any,
+                 env_carry: Any, horizon: int,
+                 chunk: Optional[int] = None):
+        self.env = env
+        self.learn = learn
+        self.horizon = horizon
+        self.chunk = chunk
+        # the chunk fn donates its input state; copy so the caller's
+        # params/opt_state/carry buffers survive the first dispatch
+        self.state = jax.tree.map(jnp.copy,
+                                  TrainState(params, opt_state, env_carry))
+        self.num_samplers = 1
+        self.logs: List = []
+        self._loops: Dict[int, Callable] = {}
+        self._samples_per_iter = sampler_mod.samples_per_rollout(
+            env_carry[1].shape[0], horizon)      # obs is (B, obs_dim)
+        from repro.core.timing import PhaseTimer
+        self.timer = PhaseTimer()
+
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def opt_state(self):
+        return self.state.opt_state
+
+    def _loop_for(self, chunk: int) -> Callable:
+        if chunk not in self._loops:
+            self._loops[chunk] = make_fused_train_loop(
+                self.env, self.learn, self.horizon, chunk)
+        return self._loops[chunk]
+
+    def run(self, iterations: int) -> List:
+        from repro.core.orchestrator import IterationLog, record_log
+        done = 0
+        while done < iterations:
+            c = min(self.chunk or iterations, iterations - done)
+            loop = self._loop_for(c)
+            t0 = time.perf_counter()
+            self.state, metrics = loop(self.state)
+            jax.block_until_ready(self.state.params)
+            per_iter = (time.perf_counter() - t0) / c
+            returns = jax.device_get(metrics["mean_return"])
+            for j in range(c):
+                record_log(self.logs, self.timer, IterationLog(
+                    iteration=done + j,
+                    collect_time=0.0,
+                    collect_time_serial=0.0,
+                    learn_time=per_iter,
+                    mean_return=float(returns[j]),
+                    samples=self._samples_per_iter,
+                ))
+            done += c
+        return self.logs

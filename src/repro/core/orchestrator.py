@@ -1,24 +1,34 @@
-"""WALL-E's agent processor: synchronous baseline + asynchronous runtime.
+"""WALL-E's agent processor: runners as thin drivers over sampler backends.
 
-* ``SyncRunner`` — the N=1 architecture of the paper's comparison (also
-  runs N logical samplers back-to-back so per-sampler critical-path time
-  can be measured on a single host; see DESIGN.md §2 on measurement).
+* ``SyncRunner`` — collect (via a ``SamplerBackend``) -> learn -> repeat.
+  With the default ``InlineBackend`` and ``num_samplers=1`` this is exactly
+  the paper's N=1 baseline; with N > 1 per-sampler critical-path time is
+  still measurable on a single host (see DESIGN.md §2 on measurement).
 * ``AsyncOrchestrator`` — the paper's architecture: N sampler threads
   generating experience with the freshest published policy (possibly
   stale), a learner thread consuming the experience queue and publishing
   new parameters to the policy store. Device work stays jitted; threads
   orchestrate, matching the paper's process roles.
+
+Both runners assemble their ``IterationLog`` through the same helpers
+(``timed_learn`` + ``assemble_log``) so the collect/learn accounting that
+feeds Figs 4-7 has exactly one definition.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.backends import (
+    InlineBackend,
+    SamplerBackend,
+    merge_trajs,
+    timed_rollout,
+)
 from repro.core.queues import Experience, ExperienceQueue, PolicyStore
 from repro.core.timing import PhaseTimer
 from repro.data import trajectory
@@ -38,59 +48,74 @@ class IterationLog:
         return dataclasses.asdict(self)
 
 
+# ====================================================== shared helpers
+def timed_learn(learn: Callable, params, opt_state, merged):
+    """One jitted learner update, blocked and timed."""
+    t0 = time.perf_counter()
+    params, opt_state, metrics = learn(params, opt_state, merged)
+    jax.block_until_ready(params)
+    return params, opt_state, metrics, time.perf_counter() - t0
+
+
+def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
+                 learn_time: float, merged, samples: Optional[int] = None,
+                 staleness: float = 0.0) -> IterationLog:
+    """The single definition of per-iteration accounting (sync + async)."""
+    return IterationLog(
+        iteration=iteration,
+        collect_time=max(per_sampler_seconds),
+        collect_time_serial=sum(per_sampler_seconds),
+        learn_time=learn_time,
+        mean_return=float(trajectory.episode_returns(merged)),
+        samples=(samples if samples is not None
+                 else trajectory.num_samples(merged)),
+        staleness=staleness,
+    )
+
+
+def record_log(logs: List[IterationLog], timer: PhaseTimer,
+               log: IterationLog) -> None:
+    logs.append(log)
+    timer.add("collect", log.collect_time)
+    timer.add("learn", log.learn_time)
+
+
 # ================================================================== sync
 class SyncRunner:
-    """Collect (N samplers, serially timed) -> learn -> repeat.
+    """collect (backend) -> learn -> repeat.
 
-    With ``num_samplers=1`` this is exactly the paper's baseline. With
-    N > 1 it executes each sampler's work back-to-back, recording each
-    sampler's wall time; ``collect_time`` reports the max (the critical
-    path a truly parallel deployment would see) and
-    ``collect_time_serial`` the sum (what N=1 pays for the same samples).
+    Backward-compatible construction: pass ``(rollout, learn, params,
+    opt_state, carries, num_samplers)`` and an ``InlineBackend`` is built —
+    or pass ``backend=`` (any ``SamplerBackend``) and leave ``rollout`` /
+    ``carries`` as None.
     """
 
-    def __init__(self, rollout: Callable, learn: Callable,
-                 params: Any, opt_state: Any, carries: List[Any],
-                 num_samplers: int):
-        assert len(carries) == num_samplers
-        self.rollout = jax.jit(rollout)
+    def __init__(self, rollout: Optional[Callable], learn: Callable,
+                 params: Any, opt_state: Any,
+                 carries: Optional[List[Any]] = None,
+                 num_samplers: Optional[int] = None, *,
+                 backend: Optional[SamplerBackend] = None):
+        if backend is None:
+            assert rollout is not None and carries is not None
+            backend = InlineBackend(rollout, carries)
+        if num_samplers is not None:
+            assert backend.num_samplers == num_samplers
+        self.backend = backend
         self.learn = jax.jit(learn)
         self.params = params
         self.opt_state = opt_state
-        self.carries = carries
-        self.num_samplers = num_samplers
+        self.num_samplers = backend.num_samplers
         self.timer = PhaseTimer()
         self.logs: List[IterationLog] = []
 
     def run(self, iterations: int) -> List[IterationLog]:
         for it in range(iterations):
-            per_sampler: List[float] = []
-            trajs = []
-            for i in range(self.num_samplers):
-                t0 = time.perf_counter()
-                self.carries[i], traj = self.rollout(self.params,
-                                                     self.carries[i])
-                traj = jax.block_until_ready(traj)
-                per_sampler.append(time.perf_counter() - t0)
-                trajs.append(traj)
-            merged = trajectory.merge(trajs) if len(trajs) > 1 else trajs[0]
-            t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self.learn(
-                self.params, self.opt_state, merged)
-            jax.block_until_ready(self.params)
-            learn_time = time.perf_counter() - t0
-            ret = float(trajectory.episode_returns(merged))
-            log = IterationLog(
-                iteration=it,
-                collect_time=max(per_sampler),
-                collect_time_serial=sum(per_sampler),
-                learn_time=learn_time,
-                mean_return=ret,
-                samples=trajectory.num_samples(merged),
-            )
-            self.logs.append(log)
-            self.timer.add("collect", log.collect_time)
-            self.timer.add("learn", learn_time)
+            merged, stats = self.backend.collect(self.params)
+            self.params, self.opt_state, _, learn_time = timed_learn(
+                self.learn, self.params, self.opt_state, merged)
+            record_log(self.logs, self.timer,
+                       assemble_log(it, stats.per_sampler_seconds,
+                                    learn_time, merged, stats.samples))
         return self.logs
 
 
@@ -126,10 +151,8 @@ class AsyncOrchestrator:
     def _sampler_loop(self, i: int) -> None:
         while not self._stop.is_set():
             params, version = self.store.read()
-            t0 = time.perf_counter()
-            self.carries[i], traj = self.rollout(params, self.carries[i])
-            traj = jax.block_until_ready(traj)
-            dt = time.perf_counter() - t0
+            self.carries[i], traj, dt = timed_rollout(
+                self.rollout, params, self.carries[i])
             try:
                 self.expq.put(Experience(traj, version, i, dt), timeout=5.0)
             except Exception:
@@ -150,29 +173,16 @@ class AsyncOrchestrator:
             if self._stop.is_set() and not exps:
                 return
             wait = time.perf_counter() - t_wait0
-            trajs = [e.traj for e in exps]
-            merged = (trajectory.merge(trajs) if len(trajs) > 1
-                      else trajs[0])
-            t0 = time.perf_counter()
+            merged = merge_trajs([e.traj for e in exps])
             params, _ = self.store.read()
-            params, self.opt_state, metrics = self.learn(
-                params, self.opt_state, merged)
-            jax.block_until_ready(params)
-            learn_time = time.perf_counter() - t0
+            params, self.opt_state, _, learn_time = timed_learn(
+                self.learn, params, self.opt_state, merged)
             self.store.publish(params)
-            collect = max(e.collect_seconds for e in exps)
-            log = IterationLog(
-                iteration=it,
-                collect_time=collect,
-                collect_time_serial=sum(e.collect_seconds for e in exps),
-                learn_time=learn_time,
-                mean_return=float(trajectory.episode_returns(merged)),
-                samples=sum(trajectory.num_samples(t) for t in trajs),
-                staleness=self.expq.mean_staleness(),
-            )
-            self.logs.append(log)
+            record_log(self.logs, self.timer,
+                       assemble_log(it, [e.collect_seconds for e in exps],
+                                    learn_time, merged,
+                                    staleness=self.expq.mean_staleness()))
             self.timer.add("collect_wait", wait)
-            self.timer.add("learn", learn_time)
 
     # ---------------------------------------------------------------- run
     def run(self, updates: int, timeout: float = 600.0) -> List[IterationLog]:

@@ -80,6 +80,8 @@ def make_sharded_rollout(env: Env, horizon: int, mesh,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.sharding import shard_map_compat
+
     rollout = make_env_rollout(env, horizon)
     batch_spec = P(data_axes)                      # leading dim = env batch
     carry_spec = (batch_spec, batch_spec, batch_spec)
@@ -89,12 +91,11 @@ def make_sharded_rollout(env: Env, horizon: int, mesh,
                            "values")}
     traj_spec["last_value"] = batch_spec
 
-    sharded = jax.shard_map(
+    sharded = shard_map_compat(
         lambda p, c: rollout(p, c),
-        mesh=mesh,
-        in_specs=(P(), carry_spec),
-        out_specs=(carry_spec, traj_spec),
-        check_vma=False,
+        mesh,
+        (P(), carry_spec),
+        (carry_spec, traj_spec),
     )
     return sharded
 

@@ -11,7 +11,7 @@ Two modes, selected by --mode:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --mode rl --env pendulum \
-      --num-samplers 4 --iterations 20
+      --num-samplers 4 --iterations 20 --backend {inline,threaded,sharded,fused}
   PYTHONPATH=src python -m repro.launch.train --mode lm \
       --arch mixtral-8x7b-reduced --steps 5
 """
@@ -28,13 +28,21 @@ from repro import envs
 from repro.algos.ppo import PPOConfig, make_lm_train_step, make_mlp_learner
 from repro.checkpoint import save
 from repro.configs import get_config
-from repro.core import AsyncOrchestrator, SyncRunner
+from repro.core import AsyncOrchestrator, FusedRunner, SyncRunner
+from repro.core import make_backend
 from repro.core import sampler as sampler_mod
 from repro.models import mlp_policy, transformer
 from repro.optim import adam
 
 
-def run_rl(args) -> None:
+def build_rl_runner(args):
+    """Construct the runner selected by --backend / --async.
+
+    ``inline`` / ``threaded`` / ``sharded`` are SamplerBackends driven by
+    SyncRunner; ``fused`` is the single-dispatch engine (whole
+    collect->learn chunk under one jit); ``--async`` selects the paper's
+    free-running sampler-thread architecture.
+    """
     env = envs.make(args.env)
     key = jax.random.PRNGKey(args.seed)
     params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim,
@@ -49,16 +57,27 @@ def run_rl(args) -> None:
                                    per)
         for i in range(args.num_samplers)
     ]
-    cls = AsyncOrchestrator if args.async_mode else SyncRunner
-    runner = cls(rollout, learn, params, opt_state, carries,
-                 args.num_samplers)
+    if args.async_mode:
+        return AsyncOrchestrator(rollout, learn, params, opt_state, carries,
+                                 args.num_samplers)
+    if args.backend == "fused":
+        carry = sampler_mod.init_env_carry(
+            env, jax.random.PRNGKey(args.seed), args.global_batch)
+        return FusedRunner(env, learn, params, opt_state, carry,
+                           horizon=args.horizon, chunk=args.chunk)
+    backend = make_backend(args.backend, rollout, carries,
+                           env=env, horizon=args.horizon)
+    return SyncRunner(None, learn, params, opt_state, backend=backend)
+
+
+def run_rl(args) -> None:
+    runner = build_rl_runner(args)
     logs = runner.run(args.iterations)
     for log in logs:
         print(json.dumps(log.as_dict()))
     if args.ckpt_dir:
-        save(args.ckpt_dir, args.iterations,
-             runner.params if args.async_mode else runner.params,
-             metadata={"env": args.env})
+        save(args.ckpt_dir, args.iterations, runner.params,
+             metadata={"env": args.env, "backend": args.backend})
 
 
 def run_lm(args) -> None:
@@ -109,6 +128,11 @@ def main() -> None:
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="inline",
+                    choices=("inline", "threaded", "sharded", "fused"))
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="fused backend: iterations per device dispatch "
+                         "(default: all of --iterations in one chunk)")
     ap.add_argument("--async", dest="async_mode", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()

@@ -1,9 +1,29 @@
 """Shared pytest fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests
 and benches must see the real single CPU device; only launch/dryrun.py (run
 as its own process) materialises the 512 placeholder devices."""
+import importlib.util
+
 import jax
 import numpy as np
 import pytest
+
+# Property-based modules need hypothesis; when it is absent (minimal
+# environments), skip them at collection instead of erroring at import.
+_HYPOTHESIS_MODULES = [
+    "test_algos.py",
+    "test_attention.py",
+    "test_core_queues.py",
+    "test_envs_data.py",
+    "test_optim_ckpt.py",
+    "test_wrappers.py",
+]
+collect_ignore = (
+    [] if importlib.util.find_spec("hypothesis") else _HYPOTHESIS_MODULES)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end tests (excluded in CI)")
 
 
 @pytest.fixture(scope="session")
