@@ -4,22 +4,20 @@ Measurement methodology on a 1-core container (DESIGN.md §2): each
 sampler's work is executed and timed separately; the *critical path* of an
 N-parallel deployment is the max over samplers (reported), the N=1 cost is
 the sum. Queue/orchestration overhead is measured from the async runtime.
+
+``build_walle`` resolves everything through the unified experiment API
+(``repro.experiment``), so any registered algo (ppo/trpo/ddpg) can be
+benchmarked on any backend — ``fig_parallel.py --algo trpo`` etc.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import jax
 
-from repro import envs
-from repro.algos.ppo import PPOConfig, make_mlp_learner
-from repro.core import sampler as sampler_mod
-from repro.core.backends import make_backend
-from repro.core.fused import FusedRunner
-from repro.core.orchestrator import SyncRunner
-from repro.models import mlp_policy
-from repro.optim import adam
+from repro import experiment
+from repro.experiment import ExperimentSpec, Schedule
 
 ROWS: List[str] = []
 
@@ -32,30 +30,23 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def build_walle(env_name: str, num_samplers: int, total_samples: int,
                 env_batch: int = 8, seed: int = 0,
-                backend: str = "inline", chunk=None):
-    """The paper's setup: PPO + MLP policy + N samplers splitting a fixed
-    per-iteration sample budget (20000 in the paper), scheduled by the
-    selected SamplerBackend — or the fused single-dispatch engine."""
-    env = envs.make(env_name)
-    key = jax.random.PRNGKey(seed)
-    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 64)
-    opt = adam(3e-4)
-    learn = make_mlp_learner(opt, PPOConfig(epochs=4, minibatches=4))
+                backend: str = "inline", chunk=None, algo: str = "ppo"):
+    """The paper's setup: an MLP-policy learner + N samplers splitting a
+    fixed per-iteration sample budget (20000 in the paper), scheduled by
+    the selected SamplerBackend — or the fused single-dispatch engine."""
     per_sampler = total_samples // num_samplers
     horizon = max(1, per_sampler // env_batch)
-    if backend == "fused":
-        carry = sampler_mod.init_env_carry(
-            env, jax.random.PRNGKey(seed + 1), env_batch * num_samplers)
-        return FusedRunner(env, learn, params, opt.init(params), carry,
-                           horizon=horizon, chunk=chunk)
-    rollout = sampler_mod.make_env_rollout(env, horizon)
-    carries = [
-        sampler_mod.init_env_carry(env, jax.random.PRNGKey(seed + 1 + i),
-                                   env_batch)
-        for i in range(num_samplers)
-    ]
-    bk = make_backend(backend, rollout, carries, env=env, horizon=horizon)
-    return SyncRunner(None, learn, params, opt.init(params), backend=bk)
+    runtime = "fused" if backend == "fused" else "sync"
+    spec = ExperimentSpec(
+        env=env_name, algo=algo,
+        backend="inline" if backend == "fused" else backend,
+        runtime=runtime,
+        model={"hidden": 64},
+        schedule=Schedule(num_samplers=num_samplers,
+                          global_batch=env_batch * num_samplers,
+                          horizon=horizon, seed=seed, chunk=chunk),
+    )
+    return experiment.build(spec)
 
 
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

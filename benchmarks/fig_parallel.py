@@ -10,6 +10,10 @@
 Scaled for a 1-core CPU container: budget defaults to 4096 samples /
 iteration instead of the paper's 20000 (same shape of the curves; the
 measurement is the per-sampler critical path, see benchmarks/common.py).
+
+Every figure runs for any registered algorithm through the unified
+experiment API — ``python -m benchmarks.fig_parallel --algo {ppo,trpo,ddpg}``
+produces the cross-algo grid the paper's PPO-only plots could not.
 """
 from __future__ import annotations
 
@@ -27,7 +31,7 @@ BACKEND = "inline"
 
 
 def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
-                       per_sampler: int = 2048) -> Dict:
+                       per_sampler: int = 2048, algo: str = "ppo") -> Dict:
     """The paper's comparison: N=10 vs N=1 at equal *wall-clock*.
 
     Each sampler does the same work per iteration (same env batch, same
@@ -39,7 +43,7 @@ def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
     out = {}
     for n in (1, 10):
         runner = build_walle(env_name, n, per_sampler * n, env_batch=8,
-                             seed=42, backend=BACKEND)
+                             seed=42, backend=BACKEND, algo=algo)
         logs = runner.run(iterations)
         rets = [l.mean_return for l in logs if l.mean_return != 0.0]
         out[f"N={n}"] = {
@@ -47,67 +51,91 @@ def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
             "collect_time": [l.collect_time for l in logs[1:]],
             "final_return": rets[-1] if rets else float("nan"),
         }
-        emit(f"fig3_return_N{n}_final",
+        emit(f"fig3_{algo}_return_N{n}_final",
              sum(out[f"N={n}"]["collect_time"]) * 1e6 / (iterations - 1),
              f"return={out[f'N={n}']['final_return']:.1f} "
              f"(samples/iter={per_sampler * n})")
     t1 = sum(out["N=1"]["collect_time"])
     t10 = sum(out["N=10"]["collect_time"])
     gain = out["N=10"]["final_return"] - out["N=1"]["final_return"]
-    emit("fig3_N10_vs_N1", 0.0,
+    emit(f"fig3_{algo}_N10_vs_N1", 0.0,
          f"return_gain={gain:+.1f} at collect-time ratio "
          f"x{t10 / max(t1, 1e-9):.2f} (1.0 = equal wall-clock)")
     return out
 
 
 def fig4_rollout_time(env_name: str = "cheetah", budget: int = 4096,
-                      iterations: int = 3) -> Dict[int, float]:
+                      iterations: int = 3, algo: str = "ppo"
+                      ) -> Dict[int, float]:
     times = {}
     for n in NS:
         runner = build_walle(env_name, n, budget, env_batch=8, seed=7,
-                             backend=BACKEND)
+                             backend=BACKEND, algo=algo)
         logs = runner.run(iterations)
         # skip iteration 0 (jit compile)
         ts = [l.collect_time for l in logs[1:]]
         times[n] = sum(ts) / len(ts)
-        emit(f"fig4_rollout_time_N{n}", times[n] * 1e6,
+        emit(f"fig4_{algo}_rollout_time_N{n}", times[n] * 1e6,
              f"samples={budget}")
     return times
 
 
-def fig5_speedup(times: Dict[int, float]) -> Dict[int, float]:
+def fig5_speedup(times: Dict[int, float], algo: str = "ppo"
+                 ) -> Dict[int, float]:
     t1 = times[1]
     speedups = {n: t1 / t for n, t in times.items()}
     for n, s in speedups.items():
         linear = "near-linear" if s > 0.6 * n else "sub-linear"
-        emit(f"fig5_speedup_N{n}", times[n] * 1e6, f"x{s:.2f} ({linear})")
+        emit(f"fig5_{algo}_speedup_N{n}", times[n] * 1e6,
+             f"x{s:.2f} ({linear})")
     return speedups
 
 
 def fig6_fig7_time_split(env_name: str = "cheetah", budget: int = 4096,
-                         iterations: int = 3) -> Dict:
+                         iterations: int = 3, algo: str = "ppo") -> Dict:
     out = {}
     for n in NS:
         runner = build_walle(env_name, n, budget, env_batch=8, seed=13,
-                             backend=BACKEND)
+                             backend=BACKEND, algo=algo)
         logs = runner.run(iterations)
         collect = sum(l.collect_time for l in logs[1:])
         learn = sum(l.learn_time for l in logs[1:])
         frac_learn = learn / (learn + collect)
         mean_learn = learn / (len(logs) - 1)
         out[n] = {"frac_learn": frac_learn, "learn_time": mean_learn}
-        emit(f"fig6_learn_fraction_N{n}", 0.0, f"{100 * frac_learn:.1f}%")
-        emit(f"fig7_learn_time_N{n}", mean_learn * 1e6, "per-iteration")
+        emit(f"fig6_{algo}_learn_fraction_N{n}", 0.0,
+             f"{100 * frac_learn:.1f}%")
+        emit(f"fig7_{algo}_learn_time_N{n}", mean_learn * 1e6,
+             "per-iteration")
     return out
 
 
-def run_all(out_path: str = "results/paper_figs.json") -> None:
+def run_all(out_path: str = "results/paper_figs.json",
+            algo: str = "ppo") -> None:
     import os
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    results = {"fig3": fig3_return_curves()}
-    times = fig4_rollout_time()
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {"algo": algo, "fig3": fig3_return_curves(algo=algo)}
+    times = fig4_rollout_time(algo=algo)
     results["fig4"] = times
-    results["fig5"] = fig5_speedup(times)
-    results["fig6_fig7"] = fig6_fig7_time_split()
+    results["fig5"] = fig5_speedup(times, algo=algo)
+    results["fig6_fig7"] = fig6_fig7_time_split(algo=algo)
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, default=float)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from repro import registry
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="ppo",
+                    choices=registry.choices("algo"),
+                    help="which registered algorithm to measure")
+    ap.add_argument("--out", default=None,
+                    help="results JSON path (default: "
+                         "results/paper_figs_<algo>.json)")
+    args = ap.parse_args()
+    out = args.out or f"results/paper_figs_{args.algo}.json"
+    print("name,us_per_call,derived")
+    run_all(out_path=out, algo=args.algo)

@@ -2,47 +2,42 @@
 + policy/experience queues vs the synchronous baseline, with staleness and
 queue accounting printed.
 
+Both sides are the *same* ``ExperimentSpec`` with only ``runtime`` flipped
+(``sync`` over the threaded backend vs ``async``) — the unified experiment
+API makes the runtime a one-word choice.
+
   PYTHONPATH=src python examples/async_vs_sync.py
 """
 import time
 
-import jax
-
-from repro import envs
-from repro.algos.ppo import PPOConfig, make_mlp_learner
-from repro.core import AsyncOrchestrator, SyncRunner, make_backend
-from repro.core import sampler as S
-from repro.models import mlp_policy
-from repro.optim import adam
+from repro import experiment
+from repro.experiment import ExperimentSpec, Schedule
 
 N = 3
 UPDATES = 6
 
 
-def build(cls, backend=None, **kw):
-    env = envs.make("cartpole")
-    key = jax.random.PRNGKey(0)
-    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 32)
-    opt = adam(1e-3)
-    learn = make_mlp_learner(opt, PPOConfig(epochs=2, minibatches=2))
-    rollout = S.make_env_rollout(env, horizon=128)
-    carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), 8)
-               for i in range(N)]
-    if backend is not None:
-        return cls(None, learn, params, opt.init(params),
-                   backend=make_backend(backend, rollout, carries), **kw)
-    return cls(rollout, learn, params, opt.init(params), carries, N, **kw)
+def spec_for(runtime: str) -> ExperimentSpec:
+    return ExperimentSpec(
+        env="cartpole", algo="ppo",
+        # sync baseline collects with the threaded backend, so its
+        # fan-out matches the async runtime's sampler threads 1:1
+        backend="threaded", runtime=runtime,
+        model={"hidden": 32},
+        algo_kwargs={"lr": 1e-3, "epochs": 2, "minibatches": 2},
+        schedule=Schedule(num_samplers=N, global_batch=8 * N, horizon=128,
+                          iterations=UPDATES, seed=0,
+                          min_batches_per_update=2),
+    )
 
 
 if __name__ == "__main__":
-    # the sync baseline timed with the threaded backend, so its collection
-    # fan-out matches the async runtime's sampler threads 1:1
-    sync = build(SyncRunner, backend="threaded")
+    sync = experiment.build(spec_for("sync"))
     t0 = time.perf_counter()
     sync_logs = sync.run(UPDATES)
     t_sync = time.perf_counter() - t0
 
-    orch = build(AsyncOrchestrator, min_batches_per_update=2)
+    orch = experiment.build(spec_for("async"))
     t0 = time.perf_counter()
     async_logs = orch.run(UPDATES, timeout=300)
     t_async = time.perf_counter() - t0

@@ -1,85 +1,42 @@
 """Paper §6 further-work #1: DDPG + replay buffer fed by parallel samplers.
 
 Off-policy learning is even hungrier for samples, so parallel collection
-helps more: samplers write transitions into a shared replay ring and the
-learner draws uniform minibatches at its own pace.
+helps more: samplers record full transitions (``next_obs``), the learner
+pushes them through a shared replay ring and draws uniform minibatches.
+
+Through the unified experiment API this is just ``algo="ddpg"`` on the
+threaded backend — the replay buffer lives inside the algorithm's
+``opt_state``, so the same runners/backends that drive PPO drive DDPG
+(swap ``backend`` for ``"inline"``/``"sharded"``, or set
+``runtime="fused"`` with ``backend="inline"``, and it still runs).
 
   PYTHONPATH=src python examples/offpolicy_ddpg.py
 """
-import jax
-import jax.numpy as jnp
-
-from repro import envs
-from repro.algos import ddpg
-from repro.data.replay import add_batch, init_replay, sample
-from repro.envs.base import auto_reset
-from repro.optim import adam
+from repro import experiment
+from repro.experiment import ExperimentSpec, Schedule
 
 N_SAMPLERS = 4
 ENV_BATCH = 4
 HORIZON = 64
 UPDATES = 40
 
-
-def make_collector(env):
-    step_fn = auto_reset(env)
-
-    def collect(params, carry, key, noise):
-        def body(c, k):
-            state, obs = c
-            ka, ke = jax.random.split(k)
-            a = ddpg.actor_apply(params["actor"], obs)
-            a = jnp.clip(a + noise * jax.random.normal(ka, a.shape), -1, 1)
-            state2, obs2, rew, done = jax.vmap(step_fn)(
-                state, a, jax.random.split(ke, obs.shape[0]))
-            out = {"obs": obs, "actions": a, "rewards": rew,
-                   "next_obs": obs2, "dones": done}
-            return (state2, obs2), out
-
-        keys = jax.random.split(key, HORIZON)
-        carry, traj = jax.lax.scan(body, carry, keys)
-        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), traj)
-        return carry, flat
-
-    return jax.jit(collect)
-
-
 if __name__ == "__main__":
-    env = envs.make("pendulum")
-    key = jax.random.PRNGKey(0)
-    params = ddpg.init_ddpg(key, env.obs_dim, env.act_dim, hidden=64)
-    cfg = ddpg.DDPGConfig(noise_std=0.2)
-    a_opt, c_opt = adam(cfg.actor_lr), adam(cfg.critic_lr)
-    opt_states = (a_opt.init(params["actor"]), c_opt.init(params["critic"]))
-
-    example = {"obs": jnp.zeros((1, env.obs_dim)),
-               "actions": jnp.zeros((1, env.act_dim)),
-               "rewards": jnp.zeros((1,)),
-               "next_obs": jnp.zeros((1, env.obs_dim)),
-               "dones": jnp.zeros((1,), bool)}
-    replay = init_replay(50_000, example)
-
-    collect = make_collector(env)
-    carries = []
-    for i in range(N_SAMPLERS):
-        k = jax.random.PRNGKey(10 + i)
-        states, obs = jax.vmap(env.reset)(jax.random.split(k, ENV_BATCH))
-        carries.append((states, obs))
-
-    update = jax.jit(lambda p, s, b: ddpg.ddpg_update(p, s, b, cfg,
-                                                      a_opt, c_opt))
-    for it in range(UPDATES):
-        key, *ks = jax.random.split(key, N_SAMPLERS + 2)
-        for i in range(N_SAMPLERS):        # parallel samplers fill replay
-            carries[i], flat = collect(params, carries[i], ks[i],
-                                       cfg.noise_std)
-            replay = add_batch(replay, flat)
-        batch = sample(replay, ks[-1], 256)
-        params, opt_states, metrics = update(params, opt_states, batch)
-        if it % 5 == 0 or it == UPDATES - 1:
-            print(f"update {it}: replay={int(replay.size)} "
-                  f"critic_loss={float(metrics['critic_loss']):.3f} "
-                  f"q_mean={float(metrics['q_mean']):.2f} "
-                  f"reward_mean={float(batch['rewards'].mean()):.2f}")
-    print("\nreplay filled by", N_SAMPLERS, "parallel samplers;",
-          int(replay.size), "transitions")
+    spec = ExperimentSpec(
+        env="pendulum", algo="ddpg", backend="threaded",
+        model={"hidden": 64},
+        algo_kwargs={"noise_std": 0.2, "replay_capacity": 50_000,
+                     "batch_size": 256, "updates_per_collect": 1},
+        schedule=Schedule(num_samplers=N_SAMPLERS,
+                          global_batch=ENV_BATCH * N_SAMPLERS,
+                          horizon=HORIZON, iterations=UPDATES, seed=0),
+    )
+    result = experiment.run(spec)
+    for log in result.logs[:: 5] + result.logs[-1:]:
+        print(f"update {log.iteration}: collect={log.collect_time:.3f}s "
+              f"(critical path over {N_SAMPLERS} samplers) "
+              f"learn={log.learn_time:.3f}s samples={log.samples}")
+    replay = result.runner.opt_state[2]
+    print(f"\nreplay filled by {N_SAMPLERS} parallel samplers; "
+          f"{int(replay.size)} transitions "
+          f"({UPDATES} learner updates drew uniform minibatches at their "
+          f"own pace)")

@@ -1,53 +1,50 @@
-"""Quickstart: WALL-E's experiment in miniature.
+"""Quickstart: WALL-E's experiment in miniature, via the unified API.
 
-PPO on a pure-JAX pendulum with N=4 parallel samplers vs N=1, printing the
-per-iteration collection/learning split — the paper's Figs 3/6 story in
-~2 minutes on CPU — then the fused engine: the same iterations under a
-single jit dispatch (no host round-trips at all).
+One declarative ``ExperimentSpec`` names the whole experiment — env, algo,
+backend, runtime, model, schedule — and ``repro.experiment.run`` is the
+single entry point. Swap ``algo="ppo"`` for ``"trpo"`` / ``"ddpg"`` or
+``backend="inline"`` for ``"threaded"`` / ``"sharded"`` and nothing else
+changes: every algorithm rides every backend through the ``Algorithm``
+protocol (DESIGN.md §3).
+
+Here: PPO on a pure-JAX pendulum with N=4 parallel samplers vs N=1,
+printing the per-iteration collection/learning split — the paper's
+Figs 3/6 story in ~2 minutes on CPU — then the fused runtime: the same
+iterations under a single jit dispatch (no host round-trips at all).
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
-from repro import envs
-from repro.algos.ppo import PPOConfig, make_mlp_learner
-from repro.core import FusedRunner, SyncRunner, make_backend
-from repro.core import sampler as S
-from repro.models import mlp_policy
-from repro.optim import adam
+from repro import experiment
+from repro.experiment import ExperimentSpec, Schedule
 
 
-def setup(num_samplers: int, batch: int = 8, horizon: int = 200):
-    env = envs.make("pendulum")
-    key = jax.random.PRNGKey(0)
-    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim, 64)
-    opt = adam(1e-3)
-    learn = make_mlp_learner(opt, PPOConfig(epochs=4, minibatches=4))
-    rollout = S.make_env_rollout(env, horizon)
-    carries = [S.init_env_carry(env, jax.random.PRNGKey(1 + i), batch)
-               for i in range(num_samplers)]
-    return env, rollout, learn, params, opt.init(params), carries
+def spec_for(num_samplers: int, iterations: int = 8, backend: str = "inline",
+             runtime: str = "sync", batch: int = 8,
+             horizon: int = 200) -> ExperimentSpec:
+    return ExperimentSpec(
+        env="pendulum", algo="ppo", backend=backend, runtime=runtime,
+        model={"hidden": 64},
+        algo_kwargs={"lr": 1e-3, "epochs": 4, "minibatches": 4},
+        schedule=Schedule(num_samplers=num_samplers,
+                          global_batch=batch * num_samplers,
+                          horizon=horizon, iterations=iterations, seed=0),
+    )
 
 
 def run(num_samplers: int, iterations: int = 8, backend: str = "inline"):
-    env, rollout, learn, params, opt_state, carries = setup(num_samplers)
-    runner = SyncRunner(None, learn, params, opt_state,
-                        backend=make_backend(backend, rollout, carries,
-                                             env=env, horizon=200))
-    logs = runner.run(iterations)
+    result = experiment.run(spec_for(num_samplers, iterations, backend))
     print(f"\n=== N={num_samplers} parallel samplers ({backend}) ===")
-    for log in logs:
+    for log in result.logs:
         print(f"iter {log.iteration}: return={log.mean_return:8.1f}  "
               f"collect={log.collect_time:.3f}s "
               f"(serial-equivalent {log.collect_time_serial:.3f}s)  "
               f"learn={log.learn_time:.3f}s  samples={log.samples}")
-    return logs
+    return result.logs
 
 
 def run_fused(iterations: int = 8):
-    env, _, learn, params, opt_state, carries = setup(1)
-    runner = FusedRunner(env, learn, params, opt_state, carries[0],
-                         horizon=200, chunk=iterations)
+    spec = spec_for(1, iterations, runtime="fused")
+    runner = experiment.build(spec)
     runner.run(iterations)                 # compile the chunk once
     logs = runner.run(iterations)[iterations:]
     print(f"\n=== fused engine (1 dispatch for {iterations} iterations) ===")

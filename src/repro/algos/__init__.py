@@ -1,1 +1,5 @@
-from repro.algos import ddpg, gae, ppo  # noqa: F401
+from repro.algos import ddpg, gae, ppo, trpo  # noqa: F401
+
+# The Algorithm protocol + registered adapters live in repro.algos.api;
+# imported lazily (via registry autoload or an explicit import) to keep
+# `import repro.algos` light.

@@ -1,0 +1,224 @@
+"""The ``Algorithm`` protocol — one seam between learners and the runtime.
+
+Every algorithm the framework can train is an object with three methods:
+
+    init(key, env)                 -> (params, opt_state)
+    learn(params, opt_state, traj) -> (params, opt_state, metrics)   [jittable]
+    act(params, obs, key)          -> (action, extras)               [per-obs]
+
+plus declarative attributes the runtime uses to schedule it:
+
+* ``make_rollout(env, horizon)`` — the experience-collection function the
+  backends run. The default builds ``sampler.make_algo_rollout`` around
+  ``act``; the PPO family overrides it with the historical
+  ``make_env_rollout`` so refactoring changed no numerics.
+* ``step_keys`` / ``tail_keys`` — the trajectory layout (per-step arrays
+  vs end-of-rollout arrays), which the sharded backend turns into
+  PartitionSpecs.
+* ``needs_next_obs`` — off-policy algorithms record ``next_obs`` so their
+  replay buffer can store full transitions.
+
+``SyncRunner``, ``AsyncOrchestrator`` and ``FusedRunner`` consume any
+conforming object through this seam — that is what lets every algo run on
+every backend (``repro.experiment``). Adapters for PPO, TRPO and DDPG are
+registered under the ``"algo"`` registry kind.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+from repro.algos.ddpg import DDPGConfig, ddpg_update, explore_action, init_ddpg
+from repro.algos.ppo import PPOConfig, make_mlp_learner
+from repro.algos.trpo import TRPOConfig, make_trpo_learner
+from repro.core import sampler as sampler_mod
+from repro.data.replay import add_batch, init_replay, sample
+from repro.models import mlp_policy
+from repro.optim import adam
+
+
+@runtime_checkable
+class Algorithm(Protocol):
+    """What a learner must provide to ride the unified runtime."""
+
+    name: str
+
+    def init(self, key, env) -> Tuple[Any, Any]:
+        """Build (params, opt_state) for ``env``."""
+        ...
+
+    def learn(self, params, opt_state, traj) -> Tuple[Any, Any, Dict]:
+        """One update from a trajectory batch. Must be jittable."""
+        ...
+
+    def act(self, params, obs, key) -> Tuple[jnp.ndarray, Dict]:
+        """Action (+ per-step extras) for a single observation."""
+        ...
+
+
+class AlgorithmBase:
+    """Default runtime hooks shared by the shipped adapters."""
+
+    name = "base"
+    on_policy = True
+    needs_next_obs = False
+    step_keys: Tuple[str, ...] = ("obs", "actions", "rewards", "dones")
+    tail_keys: Tuple[str, ...] = ()
+
+    def make_rollout(self, env, horizon: int):
+        return sampler_mod.make_algo_rollout(self, env, horizon)
+
+    def rollout_tail(self, params, final_obs) -> Dict[str, jnp.ndarray]:
+        return {}
+
+
+# ======================================================== PPO-family base
+class GaussianMLPAlgorithm(AlgorithmBase):
+    """Shared hooks for algorithms on the paper's Gaussian-MLP policy +
+    value model (PPO, TRPO): same params structure, same trajectory
+    layout (behaviour logp + values + GAE bootstrap), same rollout."""
+
+    step_keys = ("obs", "actions", "rewards", "dones", "logp", "values")
+    tail_keys = ("last_value",)
+
+    hidden: int = 64
+
+    def _init_policy(self, key, env):
+        return mlp_policy.init_policy(key, env.obs_dim, env.act_dim,
+                                      hidden=self.hidden)
+
+    def act(self, params, obs, key):
+        action, logp = mlp_policy.sample_action(params, obs, key)
+        return action, {"logp": logp,
+                        "values": mlp_policy.value_apply(params, obs)}
+
+    def make_rollout(self, env, horizon: int):
+        # the historical rollout, verbatim: keeps ppo x inline bitwise-
+        # identical to the pre-refactor SyncRunner path
+        return sampler_mod.make_env_rollout(env, horizon)
+
+    def rollout_tail(self, params, final_obs):
+        return {"last_value": mlp_policy.value_apply(params, final_obs)}
+
+
+# ===================================================================== PPO
+class PPOAlgorithm(GaussianMLPAlgorithm):
+    """Clipped-surrogate PPO with the paper's Gaussian-MLP policy."""
+
+    name = "ppo"
+
+    def __init__(self, lr: float = 3e-4, hidden: int = 64, **cfg_kwargs):
+        self.cfg = PPOConfig(lr=lr, **cfg_kwargs)
+        self.hidden = hidden
+        self._opt = adam(self.cfg.lr)
+        self._learn = make_mlp_learner(self._opt, self.cfg)
+
+    def init(self, key, env):
+        params = self._init_policy(key, env)
+        return params, self._opt.init(params)
+
+    def learn(self, params, opt_state, traj):
+        return self._learn(params, opt_state, traj)
+
+
+# ==================================================================== TRPO
+class TRPOAlgorithm(GaussianMLPAlgorithm):
+    """Natural-gradient TRPO; same policy/value model and trajectory
+    layout as PPO, so it shares the PPO rollout."""
+
+    name = "trpo"
+
+    def __init__(self, lr: float = None, hidden: int = 64, **cfg_kwargs):
+        if lr is not None:
+            cfg_kwargs.setdefault("vf_lr", lr)
+        self.cfg = TRPOConfig(**cfg_kwargs)
+        self.hidden = hidden
+        self._learn = make_trpo_learner(self.cfg)
+
+    def init(self, key, env):
+        return self._init_policy(key, env), None   # no optimizer state
+
+    def learn(self, params, opt_state, traj):
+        return self._learn(params, opt_state, traj)
+
+
+# ==================================================================== DDPG
+class DDPGAlgorithm(AlgorithmBase):
+    """Off-policy DDPG: the collect path records full transitions
+    (``next_obs``) and ``learn`` pushes them through a replay ring before
+    drawing uniform minibatches — the paper's §6 further-work item, now a
+    first-class citizen of every backend.
+
+    The replay state and the sampling PRNG live inside ``opt_state`` so
+    the runners (which treat opt_state opaquely) carry them across
+    iterations — including on-device across fused chunks.
+    """
+
+    name = "ddpg"
+    on_policy = False
+    needs_next_obs = True
+
+    step_keys = ("obs", "actions", "rewards", "dones", "next_obs")
+    tail_keys = ()
+
+    def __init__(self, lr: float = None, hidden: int = 64,
+                 replay_capacity: int = 50_000, batch_size: int = 128,
+                 updates_per_collect: int = 4, **cfg_kwargs):
+        if lr is not None:
+            cfg_kwargs.setdefault("actor_lr", lr)
+            cfg_kwargs.setdefault("critic_lr", lr)
+        self.cfg = DDPGConfig(**cfg_kwargs)
+        self.hidden = hidden
+        self.replay_capacity = replay_capacity
+        self.batch_size = batch_size
+        self.updates_per_collect = updates_per_collect
+        self._a_opt = adam(self.cfg.actor_lr)
+        self._c_opt = adam(self.cfg.critic_lr)
+
+    def init(self, key, env):
+        k_net, k_sample = jax.random.split(key)
+        params = init_ddpg(k_net, env.obs_dim, env.act_dim,
+                           hidden=self.hidden)
+        example = {
+            "obs": jnp.zeros((1, env.obs_dim)),
+            "actions": jnp.zeros((1, env.act_dim)),
+            "rewards": jnp.zeros((1,)),
+            "next_obs": jnp.zeros((1, env.obs_dim)),
+            "dones": jnp.zeros((1,), bool),
+        }
+        opt_state = (self._a_opt.init(params["actor"]),
+                     self._c_opt.init(params["critic"]),
+                     init_replay(self.replay_capacity, example),
+                     k_sample)
+        return params, opt_state
+
+    def learn(self, params, opt_state, traj):
+        a_state, c_state, replay, key = opt_state
+        flat = {k: traj[k].reshape((-1,) + traj[k].shape[2:])
+                for k in self.step_keys}
+        replay = add_batch(replay, flat)
+        keys = jax.random.split(key, self.updates_per_collect + 1)
+
+        def update(carry, k):
+            params, a_state, c_state = carry
+            batch = sample(replay, k, self.batch_size)
+            params, (a_state, c_state), metrics = ddpg_update(
+                params, (a_state, c_state), batch, self.cfg,
+                self._a_opt, self._c_opt)
+            return (params, a_state, c_state), metrics
+
+        (params, a_state, c_state), metrics = jax.lax.scan(
+            update, (params, a_state, c_state), keys[1:])
+        return (params, (a_state, c_state, replay, keys[0]),
+                jax.tree.map(jnp.mean, metrics))
+
+    def act(self, params, obs, key):
+        return explore_action(params, obs, key, self.cfg), {}
+
+
+registry.register("algo", "ppo", PPOAlgorithm)
+registry.register("algo", "trpo", TRPOAlgorithm)
+registry.register("algo", "ddpg", DDPGAlgorithm)

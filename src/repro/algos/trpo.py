@@ -7,7 +7,10 @@ identical trajectory batches).
 
 Natural gradient via conjugate-gradient on Fisher-vector products
 (Hessian-of-KL vp, computed with jvp-of-grad), then a backtracking line
-search enforcing the KL trust region.
+search enforcing the KL trust region. The whole update — CG, line search
+and value-function regression — is device-side (``lax.scan``), so
+``trpo_update`` jits and the learner rides every runner/backend through
+the ``Algorithm`` seam exactly like PPO.
 """
 from __future__ import annotations
 
@@ -132,24 +135,29 @@ def trpo_update(params: Dict, batch: Dict, cfg: TRPOConfig
         return (surrogate(cand, batch),
                 mean_kl(cand, old_mean, old_std, batch["obs"]))
 
-    # backtracking line search (host loop is fine: <= 10 small evals)
-    coef = 1.0
-    accepted = 0.0
-    for _ in range(cfg.backtrack_iters):
+    # backtracking line search, device-side: evaluate the backtracked
+    # coefficients in order and keep the first that improves the surrogate
+    # within the trust region (jittable equivalent of break-on-success)
+    def ls_body(carry, _):
+        coef, accepted, found = carry
         surr, kl = try_step(coef)
-        if bool(surr > base_surr) and bool(kl <= 1.5 * cfg.max_kl):
-            accepted = coef
-            break
-        coef *= cfg.backtrack_coef
+        ok = (surr > base_surr) & (kl <= 1.5 * cfg.max_kl)
+        accepted = jnp.where(ok & ~found, coef, accepted)
+        return (coef * cfg.backtrack_coef, accepted, found | ok), None
+
+    (_, accepted, _), _ = jax.lax.scan(
+        ls_body, (jnp.ones(()), jnp.zeros(()), jnp.zeros((), bool)),
+        None, length=cfg.backtrack_iters)
     new_pi = _unflatten(flat0 + accepted * full_step, meta)
 
     # value-function regression (simple Adam-free GD for self-containment)
-    vf = params["vf"]
-    for _ in range(cfg.vf_steps):
+    def vf_body(vf, _):
         vg = jax.grad(
             lambda v: jnp.mean((mlp_policy.mlp_apply(v, batch["obs"])[..., 0]
                                 - batch["returns"]) ** 2))(vf)
-        vf = jax.tree.map(lambda p, g: p - cfg.vf_lr * g, vf, vg)
+        return jax.tree.map(lambda p, g: p - cfg.vf_lr * g, vf, vg), None
+
+    vf, _ = jax.lax.scan(vf_body, params["vf"], None, length=cfg.vf_steps)
 
     new_params = {"pi": new_pi["pi"], "log_std": new_pi["log_std"],
                   "vf": vf}

@@ -1,9 +1,15 @@
-"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``."""
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Arch names live in the unified registry (``repro.registry``, kind
+``"arch"``) alongside envs, algos and backends; each entry is a lazy
+loader so importing ``repro.configs`` never pulls in every config module.
+"""
 from __future__ import annotations
 
 import importlib
 from typing import Dict, List
 
+from repro import registry
 from repro.configs.base import (  # noqa: F401
     INPUT_SHAPES,
     InputShape,
@@ -28,16 +34,21 @@ _ARCH_MODULES = {
 ASSIGNED_ARCHS = [a for a in _ARCH_MODULES if a != "walle-mlp"]
 
 
+def _loader(module_name: str):
+    def load() -> ModelConfig:
+        return importlib.import_module(
+            f"repro.configs.{module_name}").CONFIG
+    return load
+
+
+for _arch_id, _mod in _ARCH_MODULES.items():
+    registry.register("arch", _arch_id, _loader(_mod))
+
+
 def get_config(arch_id: str) -> ModelConfig:
     if arch_id.endswith("-reduced"):
         return get_config(arch_id[: -len("-reduced")]).reduced()
-    try:
-        mod = importlib.import_module(
-            f"repro.configs.{_ARCH_MODULES[arch_id]}")
-    except KeyError:
-        raise KeyError(
-            f"unknown arch {arch_id!r}; choose from {sorted(_ARCH_MODULES)}")
-    return mod.CONFIG
+    return registry.make("arch", arch_id)
 
 
 def list_archs() -> List[str]:

@@ -1,6 +1,13 @@
 # The paper's primary contribution: WALL-E's parallel-sampler architecture
 # (N rollout samplers + async agent/learner + policy & experience queues),
 # behind a pluggable SamplerBackend seam with a fused single-dispatch engine.
+#
+# The user-facing entry point is now `repro.experiment.run(ExperimentSpec)`
+# resolved through the unified registry (`repro.registry`); the re-exports
+# below are kept as compatibility shims so historical imports
+# (`from repro.core import SyncRunner, make_backend, ...`) keep working.
+# `make_backend` delegates to the registry (kind "backend") — prefer
+# `repro.registry.make("backend", ...)` or a spec in new code.
 from repro.core import (  # noqa: F401
     backends,
     fused,

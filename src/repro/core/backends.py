@@ -30,6 +30,7 @@ from typing import Any, Callable, List, Optional, Protocol, Sequence
 
 import jax
 
+from repro import registry
 from repro.data import trajectory
 
 
@@ -150,37 +151,70 @@ class ShardedBackend:
         return traj, stats
 
 
-def make_backend(kind: str, rollout: Callable, carries: List[Any],
-                 env=None, horizon: Optional[int] = None, mesh=None):
-    """Factory used by launch/train.py and examples.
+def _build_inline(*, rollout: Callable, carries: List[Any], **_ignored):
+    return InlineBackend(rollout, carries)
 
-    ``inline`` / ``threaded`` take the per-sampler ``carries`` list;
-    ``sharded`` builds its mesh over the host's devices and a single global
-    carry (the caller passes ``carries`` whose batches it concatenates).
+
+def _build_threaded(*, rollout: Callable, carries: List[Any],
+                    max_workers: Optional[int] = None, **_ignored):
+    return ThreadedBackend(rollout, carries, max_workers)
+
+
+def _build_sharded(*, carries: List[Any], env=None,
+                   horizon: Optional[int] = None, mesh=None,
+                   rollout: Optional[Callable] = None,
+                   step_keys=None, tail_keys=None, **_ignored):
+    """Mesh over the host's devices, one sampler per ``data`` slice.
+
+    ``rollout`` here is the *unjitted* per-sampler rollout (the same one
+    inline/threaded schedule); it is re-wrapped in shard_map with specs
+    derived from ``step_keys``/``tail_keys`` (defaults: the PPO-family
+    trajectory layout).
     """
-    if kind == "inline":
-        return InlineBackend(rollout, carries)
-    if kind == "threaded":
-        return ThreadedBackend(rollout, carries)
-    if kind == "sharded":
-        import numpy as np
-        from jax.sharding import Mesh
-        from repro.core import sampler as sampler_mod
-        assert env is not None and horizon is not None
-        batch = sum(c[1].shape[0] for c in carries)
-        if mesh is None:
-            devs = np.asarray(jax.devices())
-            assert batch % len(devs) == 0, (
-                f"sharded backend: global env batch {batch} not divisible "
-                f"by the {len(devs)} available devices; adjust "
-                f"--global-batch or pass an explicit mesh")
-            mesh = Mesh(devs.reshape(len(devs), 1), ("data", "model"))
-        else:
-            assert batch % mesh.shape["data"] == 0, (
-                f"sharded backend: global env batch {batch} not divisible "
-                f"by mesh data axis {mesh.shape['data']}")
-        sharded = sampler_mod.make_sharded_rollout(env, horizon, mesh)
-        carry = jax.tree.map(
-            lambda *xs: jax.numpy.concatenate(xs, axis=0), *carries)
-        return ShardedBackend(sharded, carry, mesh)
-    raise ValueError(f"unknown backend {kind!r}")
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import sampler as sampler_mod
+    assert env is not None and horizon is not None
+    batch = sum(c[1].shape[0] for c in carries)
+    if mesh is None:
+        devs = np.asarray(jax.devices())
+        assert batch % len(devs) == 0, (
+            f"sharded backend: global env batch {batch} not divisible "
+            f"by the {len(devs)} available devices; adjust "
+            f"--global-batch or pass an explicit mesh")
+        mesh = Mesh(devs.reshape(len(devs), 1), ("data", "model"))
+    else:
+        assert batch % mesh.shape["data"] == 0, (
+            f"sharded backend: global env batch {batch} not divisible "
+            f"by mesh data axis {mesh.shape['data']}")
+    keys = {}
+    if step_keys is not None:
+        keys["step_keys"] = tuple(step_keys)
+    if tail_keys is not None:
+        keys["tail_keys"] = tuple(tail_keys)
+    sharded = sampler_mod.make_sharded_rollout(env, horizon, mesh,
+                                               rollout=rollout, **keys)
+    carry = jax.tree.map(
+        lambda *xs: jax.numpy.concatenate(xs, axis=0), *carries)
+    return ShardedBackend(sharded, carry, mesh)
+
+
+registry.register("backend", "inline", _build_inline)
+registry.register("backend", "threaded", _build_threaded)
+registry.register("backend", "sharded", _build_sharded)
+
+
+def make_backend(kind: str, rollout: Callable, carries: List[Any],
+                 env=None, horizon: Optional[int] = None, mesh=None,
+                 **kwargs):
+    """Factory used by launch/train.py, examples and ``repro.experiment``.
+
+    Thin shim over the unified registry (kind ``"backend"``): ``inline`` /
+    ``threaded`` take the per-sampler ``carries`` list; ``sharded`` builds
+    its mesh over the host's devices and a single global carry (the caller
+    passes ``carries`` whose batches it concatenates). Extra ``kwargs``
+    (e.g. ``step_keys``/``tail_keys`` for non-PPO trajectory layouts) are
+    forwarded to the backend builder.
+    """
+    return registry.make("backend", kind, rollout=rollout, carries=carries,
+                         env=env, horizon=horizon, mesh=mesh, **kwargs)

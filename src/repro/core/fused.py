@@ -36,7 +36,8 @@ class TrainState(NamedTuple):
 
 
 def make_fused_train_loop(env, learn: Callable, horizon: int,
-                          chunk: int) -> Callable:
+                          chunk: int,
+                          rollout: Optional[Callable] = None) -> Callable:
     """Build ``train_chunk(state) -> (state', metrics)``.
 
     ``learn`` is a jittable ``(params, opt_state, traj) -> (params,
@@ -45,8 +46,12 @@ def make_fused_train_loop(env, learn: Callable, horizon: int,
     iterations on device; metrics come back stacked ``(chunk, ...)`` with
     per-iteration ``mean_return``. The state argument is donated, so
     params/optimizer/env buffers are updated in place across chunks.
+
+    ``rollout`` defaults to the PPO-family ``make_env_rollout``; pass an
+    ``Algorithm``'s rollout to fuse any algo's collect->learn iteration.
     """
-    rollout = sampler_mod.make_env_rollout(env, horizon)
+    if rollout is None:
+        rollout = sampler_mod.make_env_rollout(env, horizon)
 
     def one_iteration(state: TrainState, _):
         env_carry, traj = rollout(state.params, state.env_carry)
@@ -74,11 +79,13 @@ class FusedRunner:
 
     def __init__(self, env, learn: Callable, params: Any, opt_state: Any,
                  env_carry: Any, horizon: int,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None,
+                 rollout: Optional[Callable] = None):
         self.env = env
         self.learn = learn
         self.horizon = horizon
         self.chunk = chunk
+        self.rollout = rollout
         # the chunk fn donates its input state; copy so the caller's
         # params/opt_state/carry buffers survive the first dispatch
         self.state = jax.tree.map(jnp.copy,
@@ -102,7 +109,8 @@ class FusedRunner:
     def _loop_for(self, chunk: int) -> Callable:
         if chunk not in self._loops:
             self._loops[chunk] = make_fused_train_loop(
-                self.env, self.learn, self.horizon, chunk)
+                self.env, self.learn, self.horizon, chunk,
+                rollout=self.rollout)
         return self._loops[chunk]
 
     def run(self, iterations: int) -> List:

@@ -69,27 +69,71 @@ def init_env_carry(env: Env, key, batch: int):
     return (states, obs, keys)
 
 
+def make_algo_rollout(algo, env: Env, horizon: int) -> Callable:
+    """Algorithm-generic rollout: actions come from ``algo.act``.
+
+    ``algo.act(params, obs, key) -> (action, extras)`` is vmapped over the
+    env batch; per-step ``extras`` (e.g. behaviour logp) land in the traj
+    under their own keys. Off-policy algos (``algo.needs_next_obs``) get
+    ``next_obs`` recorded so the learner can build replay transitions;
+    ``algo.rollout_tail`` appends end-of-rollout values (e.g. the GAE
+    bootstrap). Same carry/traj layout as ``make_env_rollout``, so every
+    backend schedules it unchanged.
+    """
+    step_fn = auto_reset(env)
+    needs_next_obs = bool(getattr(algo, "needs_next_obs", False))
+
+    def rollout(params, carry, _unused=None):
+        def body(carry, _):
+            env_state, obs, keys = carry
+            splits = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+            keys2, ka, ke = splits[:, 0], splits[:, 1], splits[:, 2]
+            actions, extras = jax.vmap(
+                algo.act, in_axes=(None, 0, 0))(params, obs, ka)
+            env_state2, obs2, rewards, dones = jax.vmap(step_fn)(
+                env_state, actions, ke)
+            out = {"obs": obs, "actions": actions, "rewards": rewards,
+                   "dones": dones, **extras}
+            if needs_next_obs:
+                out["next_obs"] = obs2
+            return (env_state2, obs2, keys2), out
+
+        carry, traj = jax.lax.scan(body, carry, None, length=horizon)
+        traj.update(algo.rollout_tail(params, carry[1]))
+        return carry, traj
+
+    return rollout
+
+
 # ====================================================== sharded (TPU) form
 def make_sharded_rollout(env: Env, horizon: int, mesh,
-                         data_axes=("data",)) -> Callable:
+                         data_axes=("data",), rollout: Callable = None,
+                         step_keys: Tuple[str, ...] = ("obs", "actions",
+                                                       "rewards", "dones",
+                                                       "logp", "values"),
+                         tail_keys: Tuple[str, ...] = ("last_value",)
+                         ) -> Callable:
     """One WALL-E sampler per ``data``-axis slice via shard_map.
 
     Params are replicated (the policy broadcast = the paper's policy queue);
     env state / trajectories are sharded on the batch axis and never leave
     their shard — the learner's pjit consumes them with identical sharding.
+
+    ``rollout`` defaults to the PPO-family ``make_env_rollout``; pass an
+    algorithm rollout (``make_algo_rollout``) plus its ``step_keys`` /
+    ``tail_keys`` to shard any algorithm's trajectory layout.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.sharding import shard_map_compat
 
-    rollout = make_env_rollout(env, horizon)
+    if rollout is None:
+        rollout = make_env_rollout(env, horizon)
     batch_spec = P(data_axes)                      # leading dim = env batch
     carry_spec = (batch_spec, batch_spec, batch_spec)
     # trajectory arrays are time-major (T, B, ...): batch is dim 1
-    traj_spec = {k: P(None, data_axes)
-                 for k in ("obs", "actions", "rewards", "dones", "logp",
-                           "values")}
-    traj_spec["last_value"] = batch_spec
+    traj_spec = {k: P(None, data_axes) for k in step_keys}
+    traj_spec.update({k: batch_spec for k in tail_keys})
 
     sharded = shard_map_compat(
         lambda p, c: rollout(p, c),

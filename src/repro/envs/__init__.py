@@ -1,15 +1,13 @@
+from repro import registry
 from repro.envs import cartpole, cheetah, lm_env, pendulum  # noqa: F401
 from repro.envs.base import Env, auto_reset  # noqa: F401
 
-_REGISTRY = {
-    "pendulum": pendulum.make,
-    "cartpole": cartpole.make,
-    "cheetah": cheetah.make,
-}
+registry.register("env", "pendulum", pendulum.make)
+registry.register("env", "cartpole", cartpole.make)
+registry.register("env", "cheetah", cheetah.make)
 
 
-def make(name: str) -> Env:
-    try:
-        return _REGISTRY[name]()
-    except KeyError:
-        raise KeyError(f"unknown env {name!r}; choose from {sorted(_REGISTRY)}")
+def make(name: str, **kwargs) -> Env:
+    """Build a registered env; ``kwargs`` go to its ``make`` (e.g.
+    ``max_episode_steps``, ``reward_scale``, ``dtype``)."""
+    return registry.make("env", name, **kwargs)

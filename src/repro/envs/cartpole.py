@@ -2,7 +2,11 @@
 
 Classic cart-pole physics (Barto-Sutton-Anderson) with a continuous force
 action in [-1, 1] * 10 N; reward 1 per step upright minus a small control
-cost. Episodes end on pole fall, track exit, or 500 steps.
+cost. Episodes end on pole fall, track exit, or ``max_episode_steps``.
+
+``make`` takes per-env kwargs through the registry and follows the same
+dtype conventions as ``pendulum`` (float32 observations/rewards by
+default, explicit ``dtype`` override, int32 step counter, bool done).
 """
 from __future__ import annotations
 
@@ -21,40 +25,45 @@ X_LIMIT = 2.4
 TH_LIMIT = 12 * jnp.pi / 180
 
 
-def _obs(state):
-    x, xdot, th, thdot, _ = state
-    return jnp.stack([x, xdot, th, thdot])
+def make(max_episode_steps: int = 500, reward_scale: float = 1.0,
+         force_max: float = FORCE_MAX, dtype=jnp.float32) -> Env:
+    dtype = jnp.dtype(dtype)
+    reward_scale = float(reward_scale)
 
+    def obs(state):
+        x, xdot, th, thdot, _ = state
+        return jnp.stack([x, xdot, th, thdot]).astype(dtype)
 
-def _reset(key):
-    vals = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
-    state = (vals[0], vals[1], vals[2], vals[3], jnp.zeros((), jnp.int32))
-    return state, _obs(state)
+    def reset(key):
+        vals = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        state = (vals[0], vals[1], vals[2], vals[3],
+                 jnp.zeros((), jnp.int32))
+        return state, obs(state)
 
+    def step(state, action, key):
+        del key
+        x, xdot, th, thdot, t = state
+        force = jnp.clip(action[0], -1.0, 1.0) * force_max
+        total_m = M_CART + M_POLE
+        pm_l = M_POLE * L_POLE
+        costh, sinth = jnp.cos(th), jnp.sin(th)
+        temp = (force + pm_l * thdot ** 2 * sinth) / total_m
+        th_acc = ((GRAVITY * sinth - costh * temp)
+                  / (L_POLE * (4.0 / 3.0 - M_POLE * costh ** 2 / total_m)))
+        x_acc = temp - pm_l * th_acc * costh / total_m
+        x = x + DT * xdot
+        xdot = xdot + DT * x_acc
+        th = th + DT * thdot
+        thdot = thdot + DT * th_acc
+        t = t + 1
+        state = (x, xdot, th, thdot, t)
+        fell = (jnp.abs(x) > X_LIMIT) | (jnp.abs(th) > TH_LIMIT)
+        done = fell | (t >= max_episode_steps)
+        reward = 1.0 - 0.01 * action[0] ** 2 - 1.0 * fell
+        if reward_scale != 1.0:
+            reward = reward * reward_scale
+        return state, obs(state), reward.astype(dtype), done
 
-def _step(state, action, key):
-    del key
-    x, xdot, th, thdot, t = state
-    force = jnp.clip(action[0], -1.0, 1.0) * FORCE_MAX
-    total_m = M_CART + M_POLE
-    pm_l = M_POLE * L_POLE
-    costh, sinth = jnp.cos(th), jnp.sin(th)
-    temp = (force + pm_l * thdot ** 2 * sinth) / total_m
-    th_acc = ((GRAVITY * sinth - costh * temp)
-              / (L_POLE * (4.0 / 3.0 - M_POLE * costh ** 2 / total_m)))
-    x_acc = temp - pm_l * th_acc * costh / total_m
-    x = x + DT * xdot
-    xdot = xdot + DT * x_acc
-    th = th + DT * thdot
-    thdot = thdot + DT * th_acc
-    t = t + 1
-    state = (x, xdot, th, thdot, t)
-    fell = (jnp.abs(x) > X_LIMIT) | (jnp.abs(th) > TH_LIMIT)
-    done = fell | (t >= 500)
-    reward = 1.0 - 0.01 * action[0] ** 2 - 1.0 * fell
-    return state, _obs(state), reward, done
-
-
-def make() -> Env:
     return Env(name="cartpole", obs_dim=4, act_dim=1,
-               reset=_reset, step=_step, max_episode_steps=500)
+               reset=reset, step=step,
+               max_episode_steps=max_episode_steps)

@@ -9,6 +9,10 @@ policy must discover a gait, qualitatively like HalfCheetah.
 
 Observation (14-d): 6 joint angles, 6 joint velocities, body velocity, body
 pitch. Action: 6 joint torques in [-1, 1]. Reward: vx - 0.1 * ||a||^2.
+
+``make`` takes per-env kwargs through the registry and follows the same
+dtype conventions as ``pendulum`` (float32 observations/rewards by
+default, explicit ``dtype`` override, int32 step counter, bool done).
 """
 from __future__ import annotations
 
@@ -25,38 +29,44 @@ GEAR = 6.0
 COUPLING = 0.8
 
 
-def _obs(state):
-    th, om, vx, pitch, _ = state
-    return jnp.concatenate([th, om, jnp.stack([vx, pitch])])
+def make(max_episode_steps: int = 1000, reward_scale: float = 1.0,
+         ctrl_cost: float = 0.1, dtype=jnp.float32) -> Env:
+    dtype = jnp.dtype(dtype)
+    reward_scale = float(reward_scale)
 
+    def obs(state):
+        th, om, vx, pitch, _ = state
+        return jnp.concatenate(
+            [th, om, jnp.stack([vx, pitch])]).astype(dtype)
 
-def _reset(key):
-    k1, k2 = jax.random.split(key)
-    th = jax.random.uniform(k1, (N_JOINTS,), minval=-0.1, maxval=0.1)
-    om = jax.random.uniform(k2, (N_JOINTS,), minval=-0.1, maxval=0.1)
-    state = (th, om, jnp.zeros(()), jnp.zeros(()), jnp.zeros((), jnp.int32))
-    return state, _obs(state)
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        th = jax.random.uniform(k1, (N_JOINTS,), minval=-0.1, maxval=0.1)
+        om = jax.random.uniform(k2, (N_JOINTS,), minval=-0.1, maxval=0.1)
+        state = (th, om, jnp.zeros(()), jnp.zeros(()),
+                 jnp.zeros((), jnp.int32))
+        return state, obs(state)
 
+    def step(state, action, key):
+        del key
+        th, om, vx, pitch, t = state
+        a = jnp.clip(action, -1.0, 1.0)
+        # joint dynamics: torque-driven damped oscillators, neighbour-coupled
+        neighbour = COUPLING * (jnp.roll(th, 1) - th)
+        om = om + DT * (GEAR * a - DAMPING * om - STIFFNESS * th + neighbour)
+        th = th + DT * om
+        # gait thrust: adjacent joints moving out of phase push the body
+        thrust = jnp.mean(jnp.sin(th[:-1] - th[1:]) * (om[:-1] - om[1:]))
+        vx = 0.9 * vx + DT * (8.0 * thrust)
+        pitch = 0.95 * pitch + 0.05 * jnp.mean(th)
+        t = t + 1
+        reward = vx - ctrl_cost * jnp.sum(a ** 2)
+        if reward_scale != 1.0:
+            reward = reward * reward_scale
+        done = t >= max_episode_steps
+        state = (th, om, vx, pitch, t)
+        return state, obs(state), reward.astype(dtype), done
 
-def _step(state, action, key):
-    del key
-    th, om, vx, pitch, t = state
-    a = jnp.clip(action, -1.0, 1.0)
-    # joint dynamics: torque-driven damped oscillators with neighbour coupling
-    neighbour = COUPLING * (jnp.roll(th, 1) - th)
-    om = om + DT * (GEAR * a - DAMPING * om - STIFFNESS * th + neighbour)
-    th = th + DT * om
-    # gait thrust: adjacent joints moving out of phase push the body forward
-    thrust = jnp.mean(jnp.sin(th[:-1] - th[1:]) * (om[:-1] - om[1:]))
-    vx = 0.9 * vx + DT * (8.0 * thrust)
-    pitch = 0.95 * pitch + 0.05 * jnp.mean(th)
-    t = t + 1
-    reward = vx - 0.1 * jnp.sum(a ** 2)
-    done = t >= 1000
-    state = (th, om, vx, pitch, t)
-    return state, _obs(state), reward, done
-
-
-def make() -> Env:
     return Env(name="cheetah", obs_dim=2 * N_JOINTS + 2, act_dim=N_JOINTS,
-               reset=_reset, step=_step, max_episode_steps=1000)
+               reset=reset, step=step,
+               max_episode_steps=max_episode_steps)

@@ -2,6 +2,10 @@
 
 Dynamics and reward follow the canonical Gym Pendulum-v1; used as the fast
 CPU stand-in for the paper's MuJoCo task in tests and examples.
+
+``make`` accepts per-env kwargs (episode horizon, reward scale, dtype) —
+the registry seam passes ``ExperimentSpec.env_kwargs`` straight through.
+Defaults reproduce the historical constants bitwise.
 """
 from __future__ import annotations
 
@@ -18,38 +22,44 @@ M = 1.0
 L = 1.0
 
 
-def _obs(state):
-    th, thdot, _ = state
-    return jnp.stack([jnp.cos(th), jnp.sin(th), thdot / MAX_SPEED])
-
-
-def _reset(key):
-    k1, k2 = jax.random.split(key)
-    th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
-    thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
-    state = (th, thdot, jnp.zeros((), jnp.int32))
-    return state, _obs(state)
-
-
 def _angle_norm(x):
     return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
 
 
-def _step(state, action, key):
-    del key
-    th, thdot, t = state
-    u = jnp.clip(action[0], -MAX_TORQUE, MAX_TORQUE)
-    cost = _angle_norm(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
-    thdot = thdot + (3 * G / (2 * L) * jnp.sin(th)
-                     + 3.0 / (M * L ** 2) * u) * DT
-    thdot = jnp.clip(thdot, -MAX_SPEED, MAX_SPEED)
-    th = th + thdot * DT
-    t = t + 1
-    state = (th, thdot, t)
-    done = t >= 200
-    return state, _obs(state), -cost, done
+def make(max_episode_steps: int = 200, reward_scale: float = 1.0,
+         max_torque: float = MAX_TORQUE, dtype=jnp.float32) -> Env:
+    dtype = jnp.dtype(dtype)
+    reward_scale = float(reward_scale)
 
+    def obs(state):
+        th, thdot, _ = state
+        return jnp.stack([jnp.cos(th), jnp.sin(th),
+                          thdot / MAX_SPEED]).astype(dtype)
 
-def make() -> Env:
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        state = (th, thdot, jnp.zeros((), jnp.int32))
+        return state, obs(state)
+
+    def step(state, action, key):
+        del key
+        th, thdot, t = state
+        u = jnp.clip(action[0], -max_torque, max_torque)
+        cost = _angle_norm(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
+        thdot = thdot + (3 * G / (2 * L) * jnp.sin(th)
+                         + 3.0 / (M * L ** 2) * u) * DT
+        thdot = jnp.clip(thdot, -MAX_SPEED, MAX_SPEED)
+        th = th + thdot * DT
+        t = t + 1
+        state = (th, thdot, t)
+        done = t >= max_episode_steps
+        reward = -cost
+        if reward_scale != 1.0:
+            reward = reward * reward_scale
+        return state, obs(state), reward.astype(dtype), done
+
     return Env(name="pendulum", obs_dim=3, act_dim=1,
-               reset=_reset, step=_step, max_episode_steps=200)
+               reset=reset, step=step,
+               max_episode_steps=max_episode_steps)

@@ -1,0 +1,147 @@
+"""The unified experiment API: one declarative spec, one entry point.
+
+    from repro.experiment import ExperimentSpec, run
+
+    result = run(ExperimentSpec(env="pendulum", algo="trpo",
+                                backend="threaded"))
+    for log in result.logs: ...
+
+``ExperimentSpec`` names every choice an experiment makes — env, algo,
+backend, runtime, model and schedule — as registry keys plus plain data,
+so a spec serialises losslessly (``to_dict``/``from_dict`` round-trip) and
+a checkpoint's metadata alone reproduces its run. ``build`` resolves the
+spec through the unified registry (``repro.registry``) into a runner;
+``run`` builds and drives it. ``launch/train.py``, ``examples/*`` and
+``benchmarks/*`` all delegate here, which is what makes every algorithm
+(ppo/trpo/ddpg) available on every backend (inline/threaded/sharded) and
+runtime (sync/async/fused) through one seam.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro import registry
+from repro.core import sampler as sampler_mod
+from repro.core.backends import make_backend
+from repro.core.fused import FusedRunner
+from repro.core.orchestrator import AsyncOrchestrator, IterationLog, SyncRunner
+
+RUNTIMES = ("sync", "async", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """How much work, split how — the experiment's loop shape."""
+    num_samplers: int = 4
+    global_batch: int = 16
+    horizon: int = 128
+    iterations: int = 10
+    seed: int = 0
+    chunk: Optional[int] = None           # fused runtime: iters per dispatch
+    min_batches_per_update: int = 1       # async runtime: learner drain size
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment, fully resolved: registry names + plain data."""
+    env: str = "pendulum"
+    algo: str = "ppo"
+    backend: str = "inline"               # inline | threaded | sharded
+    runtime: str = "sync"                 # sync | async | fused
+    model: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schedule: Schedule = dataclasses.field(default_factory=Schedule)
+    env_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        sched = d.get("schedule", {})
+        if not isinstance(sched, Schedule):
+            d["schedule"] = Schedule(**sched)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    spec: ExperimentSpec
+    logs: List[IterationLog]
+    runner: Any
+
+    @property
+    def params(self):
+        return self.runner.params
+
+
+def build(spec: ExperimentSpec):
+    """Resolve a spec into a runner (without driving it).
+
+    Construction mirrors the historical ``launch/train.py`` wiring
+    exactly — same PRNG key derivation (params from ``seed``, sampler i's
+    carry from ``seed + i``, the fused global carry from ``seed``) — so
+    ``ppo`` × ``inline`` is bitwise-identical to the pre-refactor
+    ``SyncRunner`` path.
+    """
+    if spec.runtime not in RUNTIMES:
+        raise ValueError(
+            f"unknown runtime {spec.runtime!r}; choose from {RUNTIMES}")
+    if not registry.contains("backend", spec.backend):
+        raise KeyError(f"unknown backend {spec.backend!r}; choose from "
+                       f"{list(registry.choices('backend'))}")
+    # runtimes that schedule collection themselves cannot honor a backend
+    # choice — reject specs that would otherwise silently misdescribe the
+    # run in checkpoint metadata
+    if spec.runtime == "fused" and spec.backend != "inline":
+        raise ValueError(
+            f"runtime 'fused' fuses collection into the train loop; "
+            f"backend must be 'inline' (got {spec.backend!r})")
+    if spec.runtime == "async" and spec.backend != "threaded":
+        raise ValueError(
+            f"runtime 'async' runs free-running sampler threads — its "
+            f"collection discipline is 'threaded'; set "
+            f"backend='threaded' (got {spec.backend!r})")
+    env = registry.make("env", spec.env, **dict(spec.env_kwargs))
+    algo = registry.make("algo", spec.algo,
+                         **{**dict(spec.model), **dict(spec.algo_kwargs)})
+    sched = spec.schedule
+    params, opt_state = algo.init(jax.random.PRNGKey(sched.seed), env)
+    rollout = algo.make_rollout(env, sched.horizon)
+
+    if spec.runtime == "fused":
+        carry = sampler_mod.init_env_carry(
+            env, jax.random.PRNGKey(sched.seed), sched.global_batch)
+        return FusedRunner(env, algo.learn, params, opt_state, carry,
+                           horizon=sched.horizon, chunk=sched.chunk,
+                           rollout=rollout)
+
+    per = sampler_mod.split_batch(sched.global_batch, sched.num_samplers)
+    carries = [
+        sampler_mod.init_env_carry(env, jax.random.PRNGKey(sched.seed + i),
+                                   per)
+        for i in range(sched.num_samplers)
+    ]
+    if spec.runtime == "async":
+        return AsyncOrchestrator(
+            rollout, algo.learn, params, opt_state, carries,
+            sched.num_samplers,
+            min_batches_per_update=sched.min_batches_per_update)
+    backend = make_backend(spec.backend, rollout, carries,
+                           env=env, horizon=sched.horizon,
+                           step_keys=algo.step_keys,
+                           tail_keys=algo.tail_keys)
+    return SyncRunner(None, algo.learn, params, opt_state, backend=backend)
+
+
+def run(spec: ExperimentSpec,
+        iterations: Optional[int] = None) -> ExperimentResult:
+    """The single entry point: build the spec's runner and drive it."""
+    runner = build(spec)
+    logs = runner.run(iterations if iterations is not None
+                      else spec.schedule.iterations)
+    return ExperimentResult(spec=spec, logs=logs, runner=runner)

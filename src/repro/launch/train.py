@@ -1,17 +1,22 @@
 """End-to-end training driver.
 
 Two modes, selected by --mode:
-* ``rl``  — the paper's experiment: PPO + N parallel samplers on a pure-JAX
-  env (sync or async runtime). CPU-runnable; this is what examples and
-  benchmarks call.
+* ``rl``  — the paper's experiment through the unified experiment API:
+  any registered algo (ppo/trpo/ddpg) + N parallel samplers on a pure-JAX
+  env, on any backend/runtime. The CLI only builds an ``ExperimentSpec``
+  and delegates to ``repro.experiment.run``; CPU-runnable.
 * ``lm``  — sequence-model PPO (RLHF-style): synthetic rollout batches
   drive ``make_lm_train_step`` under a mesh, with checkpointing. On CPU use
   a reduced arch (``--arch <id>-reduced``); full configs belong to the
   dry-run.
 
+Checkpoints record the fully-resolved spec in their metadata, so a run is
+reproducible from the checkpoint directory alone.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --mode rl --env pendulum \
-      --num-samplers 4 --iterations 20 --backend {inline,threaded,sharded,fused}
+      --algo {ppo,trpo,ddpg} --num-samplers 4 --iterations 20 \
+      --backend {inline,threaded,sharded,fused}
   PYTHONPATH=src python -m repro.launch.train --mode lm \
       --arch mixtral-8x7b-reduced --steps 5
 """
@@ -24,69 +29,67 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import envs
-from repro.algos.ppo import PPOConfig, make_lm_train_step, make_mlp_learner
+from repro import experiment
+from repro.algos.ppo import PPOConfig, make_lm_train_step
 from repro.checkpoint import save
 from repro.configs import get_config
-from repro.core import AsyncOrchestrator, FusedRunner, SyncRunner
-from repro.core import make_backend
-from repro.core import sampler as sampler_mod
-from repro.models import mlp_policy, transformer
+from repro.experiment import ExperimentSpec, Schedule
+from repro.models import transformer
 from repro.optim import adam
 
 
-def build_rl_runner(args):
-    """Construct the runner selected by --backend / --async.
+def spec_from_args(args) -> ExperimentSpec:
+    """Resolve the CLI flags into a declarative ExperimentSpec.
 
-    ``inline`` / ``threaded`` / ``sharded`` are SamplerBackends driven by
-    SyncRunner; ``fused`` is the single-dispatch engine (whole
-    collect->learn chunk under one jit); ``--async`` selects the paper's
-    free-running sampler-thread architecture.
+    ``--backend fused`` and ``--async`` select runtimes rather than
+    sampler backends; the spec keeps the distinction explicit.
     """
-    env = envs.make(args.env)
-    key = jax.random.PRNGKey(args.seed)
-    params = mlp_policy.init_policy(key, env.obs_dim, env.act_dim,
-                                    hidden=args.hidden)
-    opt = adam(args.lr)
-    opt_state = opt.init(params)
-    learn = make_mlp_learner(opt, PPOConfig(lr=args.lr))
-    rollout = sampler_mod.make_env_rollout(env, args.horizon)
-    per = sampler_mod.split_batch(args.global_batch, args.num_samplers)
-    carries = [
-        sampler_mod.init_env_carry(env, jax.random.PRNGKey(args.seed + i),
-                                   per)
-        for i in range(args.num_samplers)
-    ]
-    if args.async_mode:
-        return AsyncOrchestrator(rollout, learn, params, opt_state, carries,
-                                 args.num_samplers)
-    if args.backend == "fused":
-        carry = sampler_mod.init_env_carry(
-            env, jax.random.PRNGKey(args.seed), args.global_batch)
-        return FusedRunner(env, learn, params, opt_state, carry,
-                           horizon=args.horizon, chunk=args.chunk)
-    backend = make_backend(args.backend, rollout, carries,
-                           env=env, horizon=args.horizon)
-    return SyncRunner(None, learn, params, opt_state, backend=backend)
+    runtime = ("async" if args.async_mode
+               else "fused" if args.backend == "fused" else "sync")
+    # normalize backend to what the runtime actually does, so checkpoint
+    # metadata never records a collection schedule that didn't run:
+    # fused has no host-visible backend; async is always sampler threads
+    backend = ("inline" if args.backend == "fused"
+               else "threaded" if args.async_mode else args.backend)
+    # only forward --lr when the user set it, so each algorithm's own
+    # learning-rate defaults (ppo 3e-4, trpo vf 1e-3, ddpg 1e-3) apply
+    algo_kwargs = {} if args.lr is None else {"lr": args.lr}
+    return ExperimentSpec(
+        env=args.env,
+        algo=args.algo,
+        backend=backend,
+        runtime=runtime,
+        model={"hidden": args.hidden},
+        algo_kwargs=algo_kwargs,
+        schedule=Schedule(
+            num_samplers=args.num_samplers,
+            global_batch=args.global_batch,
+            horizon=args.horizon,
+            iterations=args.iterations,
+            seed=args.seed,
+            chunk=args.chunk,
+        ),
+    )
 
 
 def run_rl(args) -> None:
-    runner = build_rl_runner(args)
-    logs = runner.run(args.iterations)
-    for log in logs:
+    spec = spec_from_args(args)
+    result = experiment.run(spec)
+    for log in result.logs:
         print(json.dumps(log.as_dict()))
     if args.ckpt_dir:
-        save(args.ckpt_dir, args.iterations, runner.params,
-             metadata={"env": args.env, "backend": args.backend})
+        save(args.ckpt_dir, args.iterations, result.params,
+             metadata={"mode": "rl", "spec": spec.to_dict()})
 
 
 def run_lm(args) -> None:
     cfg = get_config(args.arch)
+    lr = args.lr if args.lr is not None else 3e-4
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(cfg, key)
-    opt = adam(args.lr, moment_dtype=cfg.dtype)
+    opt = adam(lr, moment_dtype=cfg.dtype)
     opt_state = opt.init(params)
-    step = jax.jit(make_lm_train_step(cfg, opt, PPOConfig(lr=args.lr)))
+    step = jax.jit(make_lm_train_step(cfg, opt, PPOConfig(lr=lr)))
     B, S = args.batch, args.seq_len
     kd = jax.random.PRNGKey(args.seed + 1)
     for i in range(args.steps):
@@ -110,13 +113,19 @@ def run_lm(args) -> None:
               f"({time.perf_counter() - t0:.2f}s)")
     if args.ckpt_dir:
         save(args.ckpt_dir, args.steps, params,
-             metadata={"arch": args.arch})
+             metadata={"mode": "lm", "arch": args.arch, "seed": args.seed,
+                       "lr": lr, "steps": args.steps,
+                       "batch": args.batch, "seq_len": args.seq_len})
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    from repro import registry
     ap.add_argument("--mode", choices=("rl", "lm"), default="rl")
-    ap.add_argument("--env", default="pendulum")
+    ap.add_argument("--env", default="pendulum",
+                    choices=registry.choices("env"))
+    ap.add_argument("--algo", default="ppo",
+                    choices=registry.choices("algo"))
     ap.add_argument("--arch", default="mixtral-8x7b-reduced")
     ap.add_argument("--num-samplers", type=int, default=4)
     ap.add_argument("--global-batch", type=int, default=16)
@@ -126,10 +135,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--hidden", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="learning rate (default: the algorithm's own; "
+                         "lm mode: 3e-4)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="inline",
-                    choices=("inline", "threaded", "sharded", "fused"))
+                    choices=registry.choices("backend") + ("fused",))
     ap.add_argument("--chunk", type=int, default=None,
                     help="fused backend: iterations per device dispatch "
                          "(default: all of --iterations in one chunk)")

@@ -1,0 +1,95 @@
+"""The unified registry: one ``register``/``make`` seam for every
+pluggable component — envs, algos, sampler backends, and model archs.
+
+Before this module the framework kept three inconsistent ad-hoc tables
+(``envs.__init__._REGISTRY``, ``configs.__init__._ARCH_MODULES`` and the
+``if kind == ...`` chain in ``core.backends.make_backend``), each with its
+own lookup, error message and extension story. Everything user-nameable
+now goes through here:
+
+    from repro import registry
+    registry.register("env", "pendulum", pendulum.make)
+    env = registry.make("env", "pendulum", max_episode_steps=100)
+    registry.choices("algo")        # ("ddpg", "ppo", "trpo")
+
+Kinds are created on first registration. The built-in entries for each
+kind live with their implementations (``repro.envs``, ``repro.algos.api``,
+``repro.core.backends``, ``repro.configs``); ``make``/``choices`` lazily
+import those modules so lookup works regardless of import order.
+
+Errors are uniform: registering a duplicate name raises ``ValueError``;
+asking for an unknown name raises ``KeyError`` whose message lists the
+registered choices.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+# module that registers the built-in entries for each kind (imported
+# lazily on first lookup so `registry.make("env", ...)` works without the
+# caller having imported repro.envs first)
+_BUILTIN_MODULES = {
+    "env": "repro.envs",
+    "algo": "repro.algos.api",
+    "backend": "repro.core.backends",
+    "arch": "repro.configs",
+}
+
+_REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {}
+
+
+def _table(kind: str, autoload: bool = False) -> Dict[str, Callable]:
+    if autoload and kind in _BUILTIN_MODULES:
+        importlib.import_module(_BUILTIN_MODULES[kind])
+    try:
+        return _REGISTRIES[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown registry kind {kind!r}; known kinds: "
+            f"{sorted(set(_REGISTRIES) | set(_BUILTIN_MODULES))}")
+
+
+def register(kind: str, name: str,
+             factory: Optional[Callable[..., Any]] = None):
+    """Register ``factory`` under ``(kind, name)``.
+
+    Usable directly (``register("env", "pendulum", make)``) or as a
+    decorator (``@register("algo", "ppo")``). Duplicate names are an
+    error — shadowing a component silently is how experiments stop being
+    reproducible.
+    """
+    def _do(fn: Callable) -> Callable:
+        table = _REGISTRIES.setdefault(kind, {})
+        if name in table:
+            raise ValueError(
+                f"{kind} {name!r} is already registered "
+                f"(to {table[name]!r}); duplicate registration is not "
+                f"allowed — pick a distinct name")
+        table[name] = fn
+        return fn
+
+    return _do(factory) if factory is not None else _do
+
+
+def make(kind: str, name: str, **kwargs) -> Any:
+    """Instantiate the component registered under ``(kind, name)``.
+
+    ``kwargs`` are passed to the registered factory verbatim.
+    """
+    table = _table(kind, autoload=True)
+    try:
+        factory = table[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown {kind} {name!r}; choose from {sorted(table)}")
+    return factory(**kwargs)
+
+
+def choices(kind: str) -> Tuple[str, ...]:
+    """Sorted names registered under ``kind`` (built-ins autoloaded)."""
+    return tuple(sorted(_table(kind, autoload=True)))
+
+
+def contains(kind: str, name: str) -> bool:
+    return name in _table(kind, autoload=True)

@@ -1,0 +1,155 @@
+"""Unified experiment API: spec round-trip, the algo x backend parity
+smoke grid, bitwise compatibility with the pre-refactor runner wiring,
+and checkpoint-metadata reproducibility."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import envs, experiment
+from repro.algos.ppo import PPOConfig, make_mlp_learner
+from repro.core import SyncRunner
+from repro.core import sampler as sampler_mod
+from repro.experiment import ExperimentSpec, Schedule
+from repro.models import mlp_policy
+from repro.optim import adam
+
+TINY = dict(num_samplers=2, global_batch=4, horizon=8, iterations=2, seed=0)
+
+
+def _tiny_spec(algo, backend="inline", runtime="sync", **sched):
+    return ExperimentSpec(env="pendulum", algo=algo, backend=backend,
+                          runtime=runtime, model={"hidden": 16},
+                          schedule=Schedule(**{**TINY, **sched}))
+
+
+def _assert_trees_equal(a, b):
+    for xa, xb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+# ============================================================== spec data
+def test_spec_roundtrip():
+    spec = ExperimentSpec(env="cheetah", algo="trpo", backend="threaded",
+                          runtime="async", model={"hidden": 32},
+                          env_kwargs={"reward_scale": 0.5},
+                          algo_kwargs={"max_kl": 0.02},
+                          schedule=Schedule(num_samplers=3, seed=7))
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    # survives a JSON round-trip too — checkpoint metadata is JSON
+    assert ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) \
+        == spec
+
+
+def test_spec_defaults_roundtrip():
+    spec = ExperimentSpec()
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_unknown_runtime_rejected():
+    with pytest.raises(ValueError, match="unknown runtime"):
+        experiment.build(_tiny_spec("ppo", runtime="warp"))
+
+
+def test_unknown_algo_rejected_with_choices():
+    with pytest.raises(KeyError, match="ppo"):
+        experiment.build(_tiny_spec("sac"))
+
+
+def test_unknown_backend_rejected_even_for_fused_runtime():
+    with pytest.raises(KeyError, match="unknown backend"):
+        experiment.build(_tiny_spec("ppo", backend="bogus",
+                                    runtime="fused"))
+
+
+def test_runtime_backend_conflicts_rejected():
+    with pytest.raises(ValueError, match="fused"):
+        experiment.build(_tiny_spec("ppo", backend="sharded",
+                                    runtime="fused"))
+    with pytest.raises(ValueError, match="async"):
+        experiment.build(_tiny_spec("ppo", backend="sharded",
+                                    runtime="async"))
+    # async always collects with free-running sampler threads; the spec
+    # must say so or ckpt metadata would misdescribe the run
+    with pytest.raises(ValueError, match="threaded"):
+        experiment.build(_tiny_spec("ppo", backend="inline",
+                                    runtime="async"))
+
+
+# ================================================= algo x backend parity
+@pytest.mark.parametrize("algo", ["ppo", "trpo", "ddpg"])
+def test_algo_backend_parity_grid(algo):
+    """Every algorithm runs on every backend, and because the backends are
+    just schedules of the same sampler work, final params agree across
+    inline/threaded/sharded from identical specs."""
+    results = {}
+    for backend in ("inline", "threaded", "sharded"):
+        res = experiment.run(_tiny_spec(algo, backend=backend))
+        assert len(res.logs) == 2, (algo, backend)
+        for log in res.logs:
+            assert np.isfinite(log.mean_return)
+            assert log.samples == TINY["global_batch"] * TINY["horizon"]
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree.leaves(res.params))
+        results[backend] = res.params
+    _assert_trees_equal(results["inline"], results["threaded"])
+    _assert_trees_equal(results["inline"], results["sharded"])
+
+
+@pytest.mark.parametrize("algo", ["ppo", "trpo", "ddpg"])
+def test_fused_runtime_runs_every_algo(algo):
+    res = experiment.run(_tiny_spec(algo, runtime="fused", chunk=2))
+    assert len(res.logs) == 2
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(res.params))
+
+
+def test_ddpg_replay_fills():
+    res = experiment.run(_tiny_spec("ddpg"))
+    replay = res.runner.opt_state[2]
+    # 2 iterations x global_batch x horizon transitions inserted
+    assert int(replay.size) == 2 * TINY["global_batch"] * TINY["horizon"]
+
+
+# ====================================== bitwise vs pre-refactor wiring
+def test_ppo_inline_bitwise_matches_legacy_runner():
+    """experiment.run(ppo x inline) reproduces the pre-refactor SyncRunner
+    construction (launch/train.py's historical build_rl_runner) bitwise."""
+    seed, hidden, lr, horizon, gb, ns, iters = 0, 32, 3e-4, 8, 4, 2, 2
+    env = envs.make("pendulum")
+    params = mlp_policy.init_policy(jax.random.PRNGKey(seed), env.obs_dim,
+                                    env.act_dim, hidden=hidden)
+    opt = adam(lr)
+    learn = make_mlp_learner(opt, PPOConfig(lr=lr))
+    rollout = sampler_mod.make_env_rollout(env, horizon)
+    per = sampler_mod.split_batch(gb, ns)
+    carries = [sampler_mod.init_env_carry(env, jax.random.PRNGKey(seed + i),
+                                          per)
+               for i in range(ns)]
+    legacy = SyncRunner(rollout, learn, params, opt.init(params), carries,
+                        ns)
+    legacy.run(iters)
+
+    spec = ExperimentSpec(
+        env="pendulum", algo="ppo", backend="inline",
+        model={"hidden": hidden}, algo_kwargs={"lr": lr},
+        schedule=Schedule(num_samplers=ns, global_batch=gb, horizon=horizon,
+                          iterations=iters, seed=seed))
+    res = experiment.run(spec)
+    _assert_trees_equal(legacy.params, res.params)
+    _assert_trees_equal(legacy.opt_state, res.runner.opt_state)
+
+
+# ==================================================== ckpt reproducibility
+def test_checkpoint_metadata_reproduces_spec(tmp_path):
+    from repro.checkpoint import load_metadata, save
+    spec = _tiny_spec("trpo", backend="threaded")
+    res = experiment.run(spec)
+    save(str(tmp_path), spec.schedule.iterations, res.params,
+         metadata={"mode": "rl", "spec": spec.to_dict()})
+    meta = load_metadata(str(tmp_path))
+    restored = ExperimentSpec.from_dict(meta["spec"])
+    assert restored == spec
+    assert restored.schedule.num_samplers == TINY["num_samplers"]
+    assert restored.schedule.seed == TINY["seed"]

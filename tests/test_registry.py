@@ -1,0 +1,105 @@
+"""Unified-registry invariants: registration errors, lookup errors,
+per-env kwargs, and shared dtype conventions."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import envs, registry
+
+
+# ========================================================== registration
+def test_duplicate_registration_raises():
+    registry.register("scratch-kind", "thing", lambda: 1)
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("scratch-kind", "thing", lambda: 2)
+    # the original entry survives the rejected overwrite
+    assert registry.make("scratch-kind", "thing") == 1
+
+
+def test_duplicate_registration_of_builtin_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("env", "pendulum", lambda: None)
+
+
+def test_register_as_decorator():
+    @registry.register("scratch-kind", "decorated")
+    def factory(x=3):
+        return x * 2
+
+    assert registry.make("scratch-kind", "decorated", x=5) == 10
+
+
+# ================================================================ lookup
+def test_unknown_name_lists_choices():
+    with pytest.raises(KeyError) as e:
+        registry.make("env", "nope")
+    msg = str(e.value)
+    assert "unknown env 'nope'" in msg
+    for name in ("pendulum", "cartpole", "cheetah"):
+        assert name in msg
+
+
+def test_unknown_algo_lists_choices():
+    with pytest.raises(KeyError) as e:
+        registry.make("algo", "sac")
+    msg = str(e.value)
+    assert "unknown algo 'sac'" in msg
+    for name in ("ppo", "trpo", "ddpg"):
+        assert name in msg
+
+
+def test_unknown_kind_lists_kinds():
+    with pytest.raises(KeyError) as e:
+        registry.make("flavour", "vanilla")
+    assert "unknown registry kind" in str(e.value)
+    assert "env" in str(e.value)
+
+
+def test_choices_cover_builtins():
+    assert set(registry.choices("algo")) >= {"ppo", "trpo", "ddpg"}
+    assert set(registry.choices("backend")) >= {"inline", "threaded",
+                                                "sharded"}
+    assert "walle-mlp" in registry.choices("arch")
+
+
+# ======================================================= env make kwargs
+def test_envs_make_accepts_kwargs():
+    env = envs.make("pendulum", max_episode_steps=5)
+    assert env.max_episode_steps == 5
+    state, obs = env.reset(jax.random.PRNGKey(0))
+    done = False
+    for _ in range(5):
+        state, obs, rew, done = env.step(state, jnp.zeros((env.act_dim,)),
+                                         jax.random.PRNGKey(1))
+    assert bool(done)
+
+
+def test_envs_make_reward_scale():
+    key = jax.random.PRNGKey(0)
+    base = envs.make("cheetah")
+    scaled = envs.make("cheetah", reward_scale=10.0)
+    s1, _ = base.reset(key)
+    s2, _ = scaled.reset(key)
+    a = jnp.ones((base.act_dim,)) * 0.5
+    _, _, r1, _ = base.step(s1, a, key)
+    _, _, r2, _ = scaled.step(s2, a, key)
+    assert float(r2) == pytest.approx(10.0 * float(r1), rel=1e-5)
+
+
+def test_envs_make_unknown_kwarg_rejected():
+    with pytest.raises(TypeError):
+        envs.make("pendulum", gravity=3.7)
+
+
+@pytest.mark.parametrize("name", ["pendulum", "cartpole", "cheetah"])
+def test_env_dtype_conventions(name):
+    """All envs follow pendulum's conventions: f32 obs/reward (with an
+    explicit dtype override), int32 step counter, bool done."""
+    key = jax.random.PRNGKey(0)
+    env = envs.make(name)
+    state, obs = env.reset(key)
+    assert obs.dtype == jnp.float32
+    state, obs, rew, done = env.step(state, jnp.zeros((env.act_dim,)), key)
+    assert obs.dtype == jnp.float32
+    assert rew.dtype == jnp.float32
+    assert done.dtype == jnp.bool_
