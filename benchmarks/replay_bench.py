@@ -1,0 +1,80 @@
+"""Experience-plane throughput microbenchmark.
+
+Per buffer kind (fifo / uniform / prioritized): adds/sec (transitions
+absorbed from a collected trajectory batch, including the n-step
+transform and — for prioritized — the sum-tree path updates) and samples/sec
+(transitions drawn per learner minibatch, including importance weights
+for prioritized). All ops run jitted on device, state-in/state-out, i.e.
+exactly what the composed train step pays per iteration.
+
+  PYTHONPATH=src python -m benchmarks.replay_bench
+  (or as the ``replay_*`` section of ``python -m benchmarks.run``)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro import registry
+
+T, B = 64, 16                     # one collected trajectory batch
+CAPACITY = 16_384
+BATCH_SIZE = 256
+OBS_DIM, ACT_DIM = 8, 2
+
+
+def _traj():
+    t = jnp.linspace(0.0, 1.0, T * B * OBS_DIM).reshape(T, B, OBS_DIM)
+    return {
+        "obs": t,
+        "actions": jnp.zeros((T, B, ACT_DIM)),
+        "rewards": jnp.ones((T, B)),
+        "dones": jnp.zeros((T, B), bool),
+        "next_obs": t + 1.0,
+    }
+
+
+def _example():
+    return {
+        "obs": jnp.zeros((1, OBS_DIM)),
+        "actions": jnp.zeros((1, ACT_DIM)),
+        "rewards": jnp.zeros((1,)),
+        "next_obs": jnp.zeros((1, OBS_DIM)),
+        "dones": jnp.zeros((1,), bool),
+    }
+
+
+def bench_buffer(kind: str, n_step: int = 1) -> None:
+    kwargs = ({} if kind == "fifo"
+              else {"capacity": CAPACITY, "batch_size": BATCH_SIZE,
+                    "n_step": n_step})
+    buf = registry.make("buffer", kind, **kwargs)
+    traj = _traj()
+    example = traj if kind == "fifo" else _example()
+    state = buf.init(example)
+    add = jax.jit(buf.add)
+    sample = jax.jit(buf.sample)
+    key = jax.random.PRNGKey(0)
+
+    state = add(state, traj)      # fill once so sampling is valid
+    tag = f"replay_{kind}" + (f"_n{n_step}" if n_step != 1 else "")
+    dt_add = timed(add, state, traj, warmup=2, iters=20)
+    adds_per_sec = (T - n_step + 1) * B / dt_add
+    emit(f"{tag}_add", dt_add * 1e6, f"adds_per_sec={adds_per_sec:.0f}")
+
+    dt_sample = timed(sample, state, key, warmup=2, iters=20)
+    drawn = T * B if kind == "fifo" else BATCH_SIZE
+    emit(f"{tag}_sample", dt_sample * 1e6,
+         f"samples_per_sec={drawn / dt_sample:.0f}")
+
+
+def run_all() -> None:
+    for kind in ("fifo", "uniform", "prioritized"):
+        bench_buffer(kind)
+    bench_buffer("uniform", n_step=3)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run_all()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig6_*  learning-time fraction vs N          (paper Fig 6)
   fig7_*  learning time per iteration vs N     (paper Fig 7)
   fused_vs_stepped_*  fused-engine dispatch-overhead savings
+  replay_*  experience-plane adds/sec + samples/sec per buffer kind
   attn_* / selective_scan_* / decode_step_*    sampler hot-spot microbenches
   roofline_*  three-term roofline per (arch x shape x mesh)  [§Roofline]
 
@@ -20,9 +21,10 @@ from __future__ import annotations
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import fig_parallel, fused_vs_stepped, kernel_bench, \
-        roofline
+        replay_bench, roofline
     fig_parallel.run_all()
     fused_vs_stepped.run_all()
+    replay_bench.run_all()
     kernel_bench.run_all()
     roofline.main()
 

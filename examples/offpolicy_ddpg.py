@@ -5,8 +5,11 @@ helps more: samplers record full transitions (``next_obs``), the learner
 pushes them through a shared replay ring and draws uniform minibatches.
 
 Through the unified experiment API this is just ``algo="ddpg"`` on the
-threaded backend — the replay buffer lives inside the algorithm's
-``opt_state``, so the same runners/backends that drive PPO drive DDPG
+threaded backend. The replay ring is part of the **experience plane** —
+a runner-owned buffer selected by ``buffer=``/``buffer_kwargs`` (swap in
+``buffer="prioritized"`` for sum-tree prioritized replay, set
+``n_step=3`` for n-step returns, or ``algo="sac"`` for soft actor-critic)
+— so the same runners/backends that drive PPO drive any off-policy algo
 (swap ``backend`` for ``"inline"``/``"sharded"``, or set
 ``runtime="fused"`` with ``backend="inline"``, and it still runs).
 
@@ -24,8 +27,9 @@ if __name__ == "__main__":
     spec = ExperimentSpec(
         env="pendulum", algo="ddpg", backend="threaded",
         model={"hidden": 64},
-        algo_kwargs={"noise_std": 0.2, "replay_capacity": 50_000,
-                     "batch_size": 256, "updates_per_collect": 1},
+        algo_kwargs={"noise_std": 0.2, "updates_per_collect": 1},
+        buffer="uniform",
+        buffer_kwargs={"capacity": 50_000, "batch_size": 256},
         schedule=Schedule(num_samplers=N_SAMPLERS,
                           global_batch=ENV_BATCH * N_SAMPLERS,
                           horizon=HORIZON, iterations=UPDATES, seed=0),
@@ -35,8 +39,8 @@ if __name__ == "__main__":
         print(f"update {log.iteration}: collect={log.collect_time:.3f}s "
               f"(critical path over {N_SAMPLERS} samplers) "
               f"learn={log.learn_time:.3f}s samples={log.samples}")
-    replay = result.runner.opt_state[2]
+    ring = result.runner.buffer_state
     print(f"\nreplay filled by {N_SAMPLERS} parallel samplers; "
-          f"{int(replay.size)} transitions "
+          f"{int(ring.size)} transitions "
           f"({UPDATES} learner updates drew uniform minibatches at their "
           f"own pace)")

@@ -2,30 +2,43 @@
 
 Every algorithm the framework can train is an object with three methods:
 
-    init(key, env)                 -> (params, opt_state)
-    learn(params, opt_state, traj) -> (params, opt_state, metrics)   [jittable]
-    act(params, obs, key)          -> (action, extras)               [per-obs]
+    init(key, env)                  -> (params, opt_state)
+    learn(params, opt_state, batch) -> (params, opt_state, metrics) [jittable]
+    act(params, obs, key)           -> (action, extras)             [per-obs]
 
-plus declarative attributes the runtime uses to schedule it:
+``batch`` is whatever the experiment's **experience buffer** sampled: the
+whole merged trajectory for on-policy algorithms (``fifo`` pass-through),
+a flat replay minibatch (with ``discounts``/``weights``/``indices``) for
+off-policy ones. The plane hooks connect the two:
 
-* ``make_rollout(env, horizon)`` — the experience-collection function the
-  backends run. The default builds ``sampler.make_algo_rollout`` around
-  ``act``; the PPO family overrides it with the historical
-  ``make_env_rollout`` so refactoring changed no numerics.
-* ``step_keys`` / ``tail_keys`` — the trajectory layout (per-step arrays
-  vs end-of-rollout arrays), which the sharded backend turns into
-  PartitionSpecs.
-* ``needs_next_obs`` — off-policy algorithms record ``next_obs`` so their
-  replay buffer can store full transitions.
+* ``observe(buffer, state, traj)`` / ``sample(buffer, state, key)`` —
+  how the algorithm pushes collected experience into its buffer and draws
+  learner batches back out; defaults delegate straight to the buffer.
+* ``default_buffer`` — the buffer kind a spec gets when it names none
+  (``fifo`` on-policy, ``uniform`` off-policy).
+* ``updates_per_collect`` — gradient steps per collected trajectory.
+* ``transition_example(env)`` — the per-transition storage schema
+  off-policy buffers allocate from.
+
+``make_train_step`` composes an algorithm with a buffer into the single
+jittable ``(params, opt_state, plane, traj) -> (params, opt_state, plane,
+metrics)`` function every runner drives, where ``plane = (buffer_state,
+sample_key)`` is runner-owned — buffer storage no longer hides inside
+``opt_state`` (DDPG's old ring did; it now rides the plane like SAC's).
+
+Plus declarative attributes the runtime uses to schedule the collection:
+``make_rollout(env, horizon)``, ``step_keys`` / ``tail_keys`` (trajectory
+layout -> PartitionSpecs for the sharded backend), ``needs_next_obs``
+(off-policy algorithms record full transitions).
 
 ``SyncRunner``, ``AsyncOrchestrator`` and ``FusedRunner`` consume any
 conforming object through this seam — that is what lets every algo run on
-every backend (``repro.experiment``). Adapters for PPO, TRPO and DDPG are
-registered under the ``"algo"`` registry kind.
+every backend (``repro.experiment``). Adapters for PPO, TRPO, DDPG and
+SAC are registered under the ``"algo"`` registry kind.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Protocol, Tuple, runtime_checkable
+from typing import Any, Callable, Dict, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +48,6 @@ from repro.algos.ddpg import DDPGConfig, ddpg_update, explore_action, init_ddpg
 from repro.algos.ppo import PPOConfig, make_mlp_learner
 from repro.algos.trpo import TRPOConfig, make_trpo_learner
 from repro.core import sampler as sampler_mod
-from repro.data.replay import add_batch, init_replay, sample
 from repro.models import mlp_policy
 from repro.optim import adam
 
@@ -50,8 +62,8 @@ class Algorithm(Protocol):
         """Build (params, opt_state) for ``env``."""
         ...
 
-    def learn(self, params, opt_state, traj) -> Tuple[Any, Any, Dict]:
-        """One update from a trajectory batch. Must be jittable."""
+    def learn(self, params, opt_state, batch) -> Tuple[Any, Any, Dict]:
+        """One update from a sampled batch. Must be jittable."""
         ...
 
     def act(self, params, obs, key) -> Tuple[jnp.ndarray, Dict]:
@@ -60,19 +72,117 @@ class Algorithm(Protocol):
 
 
 class AlgorithmBase:
-    """Default runtime hooks shared by the shipped adapters."""
+    """Default runtime + experience-plane hooks shared by the adapters."""
 
     name = "base"
     on_policy = True
     needs_next_obs = False
     step_keys: Tuple[str, ...] = ("obs", "actions", "rewards", "dones")
     tail_keys: Tuple[str, ...] = ()
+    default_buffer = "fifo"
+    updates_per_collect = 1
 
     def make_rollout(self, env, horizon: int):
         return sampler_mod.make_algo_rollout(self, env, horizon)
 
     def rollout_tail(self, params, final_obs) -> Dict[str, jnp.ndarray]:
         return {}
+
+    # ------------------------------------------- experience-plane hooks
+    def observe(self, buffer, state, traj):
+        """Push one collected trajectory into the buffer. Jittable."""
+        return buffer.add(state, traj)
+
+    def sample(self, buffer, state, key):
+        """Draw one learner batch from the buffer. Jittable."""
+        return buffer.sample(state, key)
+
+
+class OffPolicyAlgorithm(AlgorithmBase):
+    """Shared plane wiring for replay-based learners (DDPG, SAC):
+    full transitions recorded at collect time, a transition-schema hook
+    for buffer allocation, and per-update learner RNG threaded through
+    the sampled batch as ``batch["rng"]``."""
+
+    on_policy = False
+    needs_next_obs = True
+    default_buffer = "uniform"
+    updates_per_collect = 4
+    step_keys = ("obs", "actions", "rewards", "dones", "next_obs")
+    tail_keys: Tuple[str, ...] = ()
+
+    def transition_example(self, env) -> Dict[str, jnp.ndarray]:
+        """One zeroed transition — the storage schema buffers allocate."""
+        return {
+            "obs": jnp.zeros((1, env.obs_dim)),
+            "actions": jnp.zeros((1, env.act_dim)),
+            "rewards": jnp.zeros((1,)),
+            "next_obs": jnp.zeros((1, env.obs_dim)),
+            "dones": jnp.zeros((1,), bool),
+        }
+
+    def sample(self, buffer, state, key):
+        k_buf, k_learn = jax.random.split(key)
+        batch = buffer.sample(state, k_buf)
+        batch["rng"] = k_learn          # stochastic learners (SAC) draw here
+        return batch
+
+
+# ==================================================== the composed step
+def make_train_step(algo, buffer) -> Callable:
+    """Fuse ``algo`` and ``buffer`` into the one jittable step runners
+    drive:
+
+        step(params, opt_state, plane, traj)
+            -> (params, opt_state, plane, metrics)
+
+    with ``plane = (buffer_state, key)`` owned by the runner (carried
+    across iterations device-side — inside the fused engine's donated
+    scan, across the sync/async learners' jit calls). Per call: observe
+    the trajectory, then ``algo.updates_per_collect`` sample->learn steps
+    under ``lax.scan``; learners that report per-sample ``priorities``
+    get them routed into ``buffer.update_priorities``.
+
+    For pass-through buffers (``fifo``) with one update per collect the
+    step collapses to exactly the historical ``learn(params, opt_state,
+    traj)`` call — no scan, no PRNG consumption — which keeps ``ppo`` ×
+    ``inline`` bitwise-identical to the pre-plane path.
+    """
+    updates = int(getattr(algo, "updates_per_collect", 1))
+
+    if getattr(buffer, "passthrough", False) and updates == 1:
+        def step(params, opt_state, plane, traj):
+            buf_state, key = plane
+            buf_state = algo.observe(buffer, buf_state, traj)
+            batch = algo.sample(buffer, buf_state, key)
+            params, opt_state, metrics = algo.learn(params, opt_state,
+                                                    batch)
+            return params, opt_state, (buf_state, key), metrics
+        return step
+
+    def step(params, opt_state, plane, traj):
+        buf_state, key = plane
+        buf_state = algo.observe(buffer, buf_state, traj)
+        keys = jax.random.split(key, updates + 1)
+
+        def one(carry, k):
+            params, opt_state, buf_state = carry
+            batch = algo.sample(buffer, buf_state, k)
+            params, opt_state, metrics = algo.learn(params, opt_state,
+                                                    batch)
+            metrics = dict(metrics)
+            priorities = metrics.pop("priorities", None)
+            if priorities is not None:
+                buf_state = buffer.update_priorities(
+                    buf_state, batch["indices"], priorities)
+            return (params, opt_state, buf_state), metrics
+
+        (params, opt_state, buf_state), metrics = jax.lax.scan(
+            one, (params, opt_state, buf_state), keys[1:])
+        return (params, opt_state, (buf_state, keys[0]),
+                jax.tree.map(jnp.mean, metrics))
+
+    return step
 
 
 # ======================================================== PPO-family base
@@ -146,79 +256,54 @@ class TRPOAlgorithm(GaussianMLPAlgorithm):
 
 
 # ==================================================================== DDPG
-class DDPGAlgorithm(AlgorithmBase):
-    """Off-policy DDPG: the collect path records full transitions
-    (``next_obs``) and ``learn`` pushes them through a replay ring before
-    drawing uniform minibatches — the paper's §6 further-work item, now a
-    first-class citizen of every backend.
+class DDPGAlgorithm(OffPolicyAlgorithm):
+    """Off-policy DDPG on the experience plane: the collect path records
+    full transitions (``next_obs``) and each ``learn`` call consumes one
+    replay minibatch the plane sampled (uniform or prioritized, any
+    ``n_step``).
 
-    The replay state and the sampling PRNG live inside ``opt_state`` so
-    the runners (which treat opt_state opaquely) carry them across
-    iterations — including on-device across fused chunks.
+    ``opt_state`` is now *only* the two Adam states — the replay ring it
+    used to smuggle lives in the runner-owned plane state, so capacity /
+    batch size / n-step are experiment-level choices
+    (``ExperimentSpec.buffer_kwargs``), not algorithm constructor args.
     """
 
     name = "ddpg"
-    on_policy = False
-    needs_next_obs = True
-
-    step_keys = ("obs", "actions", "rewards", "dones", "next_obs")
-    tail_keys = ()
 
     def __init__(self, lr: float = None, hidden: int = 64,
-                 replay_capacity: int = 50_000, batch_size: int = 128,
                  updates_per_collect: int = 4, **cfg_kwargs):
         if lr is not None:
             cfg_kwargs.setdefault("actor_lr", lr)
             cfg_kwargs.setdefault("critic_lr", lr)
         self.cfg = DDPGConfig(**cfg_kwargs)
         self.hidden = hidden
-        self.replay_capacity = replay_capacity
-        self.batch_size = batch_size
         self.updates_per_collect = updates_per_collect
         self._a_opt = adam(self.cfg.actor_lr)
         self._c_opt = adam(self.cfg.critic_lr)
 
     def init(self, key, env):
-        k_net, k_sample = jax.random.split(key)
-        params = init_ddpg(k_net, env.obs_dim, env.act_dim,
+        params = init_ddpg(key, env.obs_dim, env.act_dim,
                            hidden=self.hidden)
-        example = {
-            "obs": jnp.zeros((1, env.obs_dim)),
-            "actions": jnp.zeros((1, env.act_dim)),
-            "rewards": jnp.zeros((1,)),
-            "next_obs": jnp.zeros((1, env.obs_dim)),
-            "dones": jnp.zeros((1,), bool),
-        }
-        opt_state = (self._a_opt.init(params["actor"]),
-                     self._c_opt.init(params["critic"]),
-                     init_replay(self.replay_capacity, example),
-                     k_sample)
-        return params, opt_state
+        return params, (self._a_opt.init(params["actor"]),
+                        self._c_opt.init(params["critic"]))
 
-    def learn(self, params, opt_state, traj):
-        a_state, c_state, replay, key = opt_state
-        flat = {k: traj[k].reshape((-1,) + traj[k].shape[2:])
-                for k in self.step_keys}
-        replay = add_batch(replay, flat)
-        keys = jax.random.split(key, self.updates_per_collect + 1)
-
-        def update(carry, k):
-            params, a_state, c_state = carry
-            batch = sample(replay, k, self.batch_size)
-            params, (a_state, c_state), metrics = ddpg_update(
-                params, (a_state, c_state), batch, self.cfg,
-                self._a_opt, self._c_opt)
-            return (params, a_state, c_state), metrics
-
-        (params, a_state, c_state), metrics = jax.lax.scan(
-            update, (params, a_state, c_state), keys[1:])
-        return (params, (a_state, c_state, replay, keys[0]),
-                jax.tree.map(jnp.mean, metrics))
+    def learn(self, params, opt_state, batch):
+        params, opt_state, metrics = ddpg_update(
+            params, opt_state, batch, self.cfg, self._a_opt, self._c_opt)
+        return params, opt_state, metrics
 
     def act(self, params, obs, key):
         return explore_action(params, obs, key, self.cfg), {}
 
 
+def _make_sac(**kwargs):
+    # lazy so api <-> sac imports never cycle (sac subclasses
+    # OffPolicyAlgorithm from this module)
+    from repro.algos.sac import SACAlgorithm
+    return SACAlgorithm(**kwargs)
+
+
 registry.register("algo", "ppo", PPOAlgorithm)
 registry.register("algo", "trpo", TRPOAlgorithm)
 registry.register("algo", "ddpg", DDPGAlgorithm)
+registry.register("algo", "sac", _make_sac)

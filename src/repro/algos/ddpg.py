@@ -55,18 +55,30 @@ def ddpg_update(params, opt_states, batch, cfg: DDPGConfig,
                 actor_opt, critic_opt) -> Tuple[Dict, Tuple, Dict]:
     """One gradient step on a replay minibatch.
 
-    batch: obs, actions, rewards, next_obs, dones — all (N, ...).
+    batch: obs, actions, rewards, next_obs — all (N, ...) — plus either
+    per-transition ``discounts`` (the experience plane's n-step bootstrap
+    factor, gamma^n or 0 past a terminal) or plain ``dones`` (legacy
+    1-step form: the discount is then ``gamma * (1 - dones)``). Optional
+    ``weights`` (N,) importance-weight the critic regression (prioritized
+    replay); metrics always carry per-sample ``priorities`` (|TD error|)
+    for the buffer to absorb.
     """
-    nonterm = 1.0 - batch["dones"].astype(jnp.float32)
+    if "discounts" in batch:
+        discounts = batch["discounts"]
+    else:
+        discounts = cfg.gamma * (1.0 - batch["dones"].astype(jnp.float32))
+    weights = batch.get("weights", jnp.ones_like(batch["rewards"]))
     a_next = actor_apply(params["target_actor"], batch["next_obs"])
     q_next = critic_apply(params["target_critic"], batch["next_obs"], a_next)
-    target = batch["rewards"] + cfg.gamma * nonterm * q_next
+    target = batch["rewards"] + discounts * q_next
 
     def critic_loss(cnet):
         q = critic_apply(cnet, batch["obs"], batch["actions"])
-        return jnp.mean((q - jax.lax.stop_gradient(target)) ** 2)
+        loss = jnp.mean(weights * (q - jax.lax.stop_gradient(target)) ** 2)
+        return loss, q
 
-    c_loss, c_grads = jax.value_and_grad(critic_loss)(params["critic"])
+    (c_loss, q_pre), c_grads = jax.value_and_grad(
+        critic_loss, has_aux=True)(params["critic"])
     c_upd, c_state = critic_opt.update(c_grads, opt_states[1],
                                        params["critic"])
     critic = apply_updates(params["critic"], c_upd)
@@ -89,5 +101,6 @@ def ddpg_update(params, opt_states, batch, cfg: DDPGConfig,
         "target_critic": polyak(params["target_critic"], critic),
     }
     metrics = {"critic_loss": c_loss, "actor_loss": a_loss,
-               "q_mean": jnp.mean(target)}
+               "q_mean": jnp.mean(target),
+               "priorities": jax.lax.stop_gradient(jnp.abs(q_pre - target))}
     return new_params, (a_state, c_state), metrics

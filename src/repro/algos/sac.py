@@ -1,0 +1,198 @@
+"""Soft Actor-Critic — the second off-policy algorithm on the experience
+plane (twin Q critics, squashed-Gaussian actor, learned entropy
+temperature).
+
+SAC exists here to prove the plane's seam is real: it shares no model
+code with DDPG, yet rides the same runner-owned buffers (uniform or
+prioritized, any ``n_step``) on every backend and runtime because all it
+implements is the ``Algorithm`` protocol — ``learn`` consumes whatever
+batch ``buffer.sample`` produced (including ``discounts``/``weights``)
+and reports per-sample ``priorities`` back for prioritized replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp_policy import gaussian_logp, init_mlp_net, mlp_apply
+from repro.optim import adam, apply_updates
+
+LOG_STD_MIN, LOG_STD_MAX = -5.0, 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SACConfig:
+    actor_lr: float = 3e-4
+    critic_lr: float = 3e-4
+    alpha_lr: float = 3e-4
+    gamma: float = 0.99
+    tau: float = 0.005              # polyak target update
+    init_alpha: float = 0.1         # initial entropy temperature
+
+
+def init_sac(key, obs_dim: int, act_dim: int, hidden: int = 64,
+             init_alpha: float = 0.1) -> Dict:
+    ka, k1, k2 = jax.random.split(key, 3)
+    critic = {
+        "q1": init_mlp_net(k1, [obs_dim + act_dim, hidden, hidden, 1]),
+        "q2": init_mlp_net(k2, [obs_dim + act_dim, hidden, hidden, 1]),
+    }
+    return {
+        # one head, two halves: [mean, log_std] (state-dependent std)
+        "actor": init_mlp_net(ka, [obs_dim, hidden, hidden, 2 * act_dim]),
+        "critic": critic,
+        "target_critic": jax.tree.map(jnp.copy, critic),
+        "log_alpha": jnp.asarray(math.log(init_alpha), jnp.float32),
+    }
+
+
+def actor_dist(net, obs) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    out = mlp_apply(net, obs)
+    mean, log_std = jnp.split(out, 2, axis=-1)
+    return mean, jnp.exp(jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX))
+
+
+def sample_action(net, obs, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tanh-squashed reparameterized Gaussian sample + its log-prob.
+
+    log pi(a) = log N(u) - sum log(1 - tanh(u)^2), with the squash
+    correction in the numerically stable softplus form.
+    """
+    mean, std = actor_dist(net, obs)
+    u = mean + std * jax.random.normal(key, mean.shape)
+    action = jnp.tanh(u)
+    squash = 2.0 * (math.log(2.0) - u - jax.nn.softplus(-2.0 * u))
+    logp = gaussian_logp(mean, std, u) - jnp.sum(squash, axis=-1)
+    return action, logp
+
+
+def q_apply(qnet, obs, act) -> jnp.ndarray:
+    return mlp_apply(qnet, jnp.concatenate([obs, act], axis=-1))[..., 0]
+
+
+def sac_update(params, opt_states, batch, key, cfg: SACConfig,
+               actor_opt, critic_opt, alpha_opt
+               ) -> Tuple[Dict, Tuple, Dict]:
+    """One SAC step on a replay minibatch.
+
+    batch: obs, actions, rewards, next_obs, discounts (gamma^n bootstrap
+    factor from the buffer's n-step transform) and optional ``weights``
+    (prioritized-replay importance weights, applied to the critic
+    regression). Returns per-sample ``priorities`` in metrics.
+    """
+    a_state, c_state, al_state = opt_states
+    k_next, k_new = jax.random.split(key)
+    act_dim = batch["actions"].shape[-1]
+    target_entropy = -float(act_dim)
+    alpha = jnp.exp(params["log_alpha"])
+    weights = batch.get("weights", jnp.ones_like(batch["rewards"]))
+
+    # ---- twin-critic regression against the entropy-regularized target
+    a_next, logp_next = sample_action(params["actor"], batch["next_obs"],
+                                      k_next)
+    q_next = jnp.minimum(
+        q_apply(params["target_critic"]["q1"], batch["next_obs"], a_next),
+        q_apply(params["target_critic"]["q2"], batch["next_obs"], a_next))
+    target = batch["rewards"] + batch["discounts"] * (
+        q_next - alpha * logp_next)
+    target = jax.lax.stop_gradient(target)
+
+    def critic_loss(cnet):
+        q1 = q_apply(cnet["q1"], batch["obs"], batch["actions"])
+        q2 = q_apply(cnet["q2"], batch["obs"], batch["actions"])
+        loss = 0.5 * jnp.mean(
+            weights * ((q1 - target) ** 2 + (q2 - target) ** 2))
+        return loss, (q1, q2)
+
+    (c_loss, (q1, q2)), c_grads = jax.value_and_grad(
+        critic_loss, has_aux=True)(params["critic"])
+    c_upd, c_state = critic_opt.update(c_grads, c_state, params["critic"])
+    critic = apply_updates(params["critic"], c_upd)
+
+    # ---- reparameterized actor step against the fresh critic
+    def actor_loss(anet):
+        a_new, logp = sample_action(anet, batch["obs"], k_new)
+        q_min = jnp.minimum(q_apply(critic["q1"], batch["obs"], a_new),
+                            q_apply(critic["q2"], batch["obs"], a_new))
+        return jnp.mean(alpha * logp - q_min), logp
+
+    (a_loss, logp_new), a_grads = jax.value_and_grad(
+        actor_loss, has_aux=True)(params["actor"])
+    a_upd, a_state = actor_opt.update(a_grads, a_state, params["actor"])
+    actor = apply_updates(params["actor"], a_upd)
+
+    # ---- temperature: pull entropy toward -act_dim
+    def alpha_loss(log_alpha):
+        return -jnp.mean(log_alpha * jax.lax.stop_gradient(
+            logp_new + target_entropy))
+
+    al_loss, al_grad = jax.value_and_grad(alpha_loss)(params["log_alpha"])
+    al_upd, al_state = alpha_opt.update(al_grad, al_state,
+                                        params["log_alpha"])
+    log_alpha = apply_updates(params["log_alpha"], al_upd)
+
+    new_params = {
+        "actor": actor,
+        "critic": critic,
+        "target_critic": jax.tree.map(
+            lambda t, s: (1 - cfg.tau) * t + cfg.tau * s,
+            params["target_critic"], critic),
+        "log_alpha": log_alpha,
+    }
+    td = 0.5 * (jnp.abs(q1 - target) + jnp.abs(q2 - target))
+    metrics = {"critic_loss": c_loss, "actor_loss": a_loss,
+               "alpha": alpha, "alpha_loss": al_loss,
+               "entropy": -jnp.mean(logp_new),
+               "q_mean": jnp.mean(target),
+               "priorities": jax.lax.stop_gradient(td)}
+    return new_params, (a_state, c_state, al_state), metrics
+
+
+# ===================================================== protocol adapter
+from repro.algos.api import OffPolicyAlgorithm  # noqa: E402
+
+
+class SACAlgorithm(OffPolicyAlgorithm):
+    """SAC through the Algorithm protocol + experience-plane hooks.
+
+    Defined in its own module (not ``algos.api``) on purpose: a new
+    off-policy algorithm rides every backend/runtime by subclassing
+    ``OffPolicyAlgorithm`` — the buffer hooks (``observe``/``sample``),
+    trajectory layout and transition schema all come from the base;
+    ``api.py`` registers it under a lazy factory so import order never
+    matters.
+    """
+
+    name = "sac"
+
+    def __init__(self, lr: float = None, hidden: int = 64,
+                 updates_per_collect: int = 4, **cfg_kwargs):
+        if lr is not None:
+            cfg_kwargs.setdefault("actor_lr", lr)
+            cfg_kwargs.setdefault("critic_lr", lr)
+        self.cfg = SACConfig(**cfg_kwargs)
+        self.hidden = hidden
+        self.updates_per_collect = updates_per_collect
+        self._a_opt = adam(self.cfg.actor_lr)
+        self._c_opt = adam(self.cfg.critic_lr)
+        self._al_opt = adam(self.cfg.alpha_lr)
+
+    def init(self, key, env):
+        params = init_sac(key, env.obs_dim, env.act_dim, hidden=self.hidden,
+                          init_alpha=self.cfg.init_alpha)
+        opt_state = (self._a_opt.init(params["actor"]),
+                     self._c_opt.init(params["critic"]),
+                     self._al_opt.init(params["log_alpha"]))
+        return params, opt_state
+
+    def learn(self, params, opt_state, batch):
+        return sac_update(params, opt_state, batch, batch["rng"], self.cfg,
+                          self._a_opt, self._c_opt, self._al_opt)
+
+    def act(self, params, obs, key):
+        action, _ = sample_action(params["actor"], obs, key)
+        return action, {}

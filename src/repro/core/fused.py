@@ -29,15 +29,23 @@ from repro.data import trajectory
 
 
 class TrainState(NamedTuple):
-    """Everything the fused loop carries across iterations, device-side."""
+    """Everything the fused loop carries across iterations, device-side.
+
+    ``plane_state`` is the experience plane's ``(buffer_state, key)`` —
+    replay rings and sum-trees live *inside* the donated scan carry, so
+    off-policy training updates its buffer in place on device across
+    chunks with zero host round-trips.
+    """
     params: Any
     opt_state: Any
     env_carry: Any
+    plane_state: Any = None
 
 
-def make_fused_train_loop(env, learn: Callable, horizon: int,
+def make_fused_train_loop(env, learn: Optional[Callable], horizon: int,
                           chunk: int,
-                          rollout: Optional[Callable] = None) -> Callable:
+                          rollout: Optional[Callable] = None,
+                          train_step: Optional[Callable] = None) -> Callable:
     """Build ``train_chunk(state) -> (state', metrics)``.
 
     ``learn`` is a jittable ``(params, opt_state, traj) -> (params,
@@ -49,17 +57,25 @@ def make_fused_train_loop(env, learn: Callable, horizon: int,
 
     ``rollout`` defaults to the PPO-family ``make_env_rollout``; pass an
     ``Algorithm``'s rollout to fuse any algo's collect->learn iteration.
+    Pass ``train_step`` (``algos.api.make_train_step``) instead of
+    ``learn`` to fuse the whole experience plane — observe -> sample ->
+    learn with ``state.plane_state`` threaded through the scan carry.
     """
     if rollout is None:
         rollout = sampler_mod.make_env_rollout(env, horizon)
 
     def one_iteration(state: TrainState, _):
         env_carry, traj = rollout(state.params, state.env_carry)
-        params, opt_state, metrics = learn(state.params, state.opt_state,
-                                           traj)
+        if train_step is not None:
+            params, opt_state, plane_state, metrics = train_step(
+                state.params, state.opt_state, state.plane_state, traj)
+        else:
+            params, opt_state, metrics = learn(state.params,
+                                               state.opt_state, traj)
+            plane_state = state.plane_state
         metrics = dict(metrics)
         metrics["mean_return"] = trajectory.episode_returns(traj)
-        return TrainState(params, opt_state, env_carry), metrics
+        return TrainState(params, opt_state, env_carry, plane_state), metrics
 
     @partial(jax.jit, donate_argnums=(0,))
     def train_chunk(state: TrainState):
@@ -77,19 +93,23 @@ class FusedRunner:
     of the chunk's wall time (DESIGN.md §2).
     """
 
-    def __init__(self, env, learn: Callable, params: Any, opt_state: Any,
-                 env_carry: Any, horizon: int,
+    def __init__(self, env, learn: Optional[Callable], params: Any,
+                 opt_state: Any, env_carry: Any, horizon: int,
                  chunk: Optional[int] = None,
-                 rollout: Optional[Callable] = None):
+                 rollout: Optional[Callable] = None,
+                 train_step: Optional[Callable] = None,
+                 plane_state: Any = None):
+        assert learn is not None or train_step is not None
         self.env = env
         self.learn = learn
+        self.train_step = train_step
         self.horizon = horizon
         self.chunk = chunk
         self.rollout = rollout
         # the chunk fn donates its input state; copy so the caller's
-        # params/opt_state/carry buffers survive the first dispatch
-        self.state = jax.tree.map(jnp.copy,
-                                  TrainState(params, opt_state, env_carry))
+        # params/opt_state/carry/plane buffers survive the first dispatch
+        self.state = jax.tree.map(
+            jnp.copy, TrainState(params, opt_state, env_carry, plane_state))
         self.num_samplers = 1
         self.logs: List = []
         self._loops: Dict[int, Callable] = {}
@@ -106,11 +126,20 @@ class FusedRunner:
     def opt_state(self):
         return self.state.opt_state
 
+    @property
+    def plane_state(self):
+        return self.state.plane_state
+
+    @property
+    def buffer_state(self):
+        return (None if self.state.plane_state is None
+                else self.state.plane_state[0])
+
     def _loop_for(self, chunk: int) -> Callable:
         if chunk not in self._loops:
             self._loops[chunk] = make_fused_train_loop(
                 self.env, self.learn, self.horizon, chunk,
-                rollout=self.rollout)
+                rollout=self.rollout, train_step=self.train_step)
         return self._loops[chunk]
 
     def run(self, iterations: int) -> List:

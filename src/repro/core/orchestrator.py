@@ -43,6 +43,8 @@ class IterationLog:
     mean_return: float
     samples: int
     staleness: float = 0.0
+    queue_drops: int = 0         # async: cumulative experiences dropped on
+                                 # queue overflow (backpressure signal)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -57,9 +59,21 @@ def timed_learn(learn: Callable, params, opt_state, merged):
     return params, opt_state, metrics, time.perf_counter() - t0
 
 
+def timed_train_step(train_step: Callable, params, opt_state, plane_state,
+                     merged):
+    """One jitted plane step (observe -> sample -> learn), blocked and
+    timed; buffer state stays device-resident inside ``plane_state``."""
+    t0 = time.perf_counter()
+    params, opt_state, plane_state, metrics = train_step(
+        params, opt_state, plane_state, merged)
+    jax.block_until_ready(params)
+    return params, opt_state, plane_state, metrics, time.perf_counter() - t0
+
+
 def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
                  learn_time: float, merged, samples: Optional[int] = None,
-                 staleness: float = 0.0) -> IterationLog:
+                 staleness: float = 0.0,
+                 queue_drops: int = 0) -> IterationLog:
     """The single definition of per-iteration accounting (sync + async)."""
     return IterationLog(
         iteration=iteration,
@@ -70,6 +84,7 @@ def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
         samples=(samples if samples is not None
                  else trajectory.num_samples(merged)),
         staleness=staleness,
+        queue_drops=queue_drops,
     )
 
 
@@ -88,31 +103,54 @@ class SyncRunner:
     opt_state, carries, num_samplers)`` and an ``InlineBackend`` is built —
     or pass ``backend=`` (any ``SamplerBackend``) and leave ``rollout`` /
     ``carries`` as None.
+
+    Experience plane: pass ``train_step=`` (``algos.api.make_train_step``)
+    plus its initial ``plane_state=(buffer_state, key)`` and the runner
+    drives the composed observe -> sample -> learn step instead of raw
+    ``learn``, owning the buffer state explicitly (``self.plane_state`` /
+    ``self.buffer_state``) — it never hides inside ``opt_state``.
     """
 
-    def __init__(self, rollout: Optional[Callable], learn: Callable,
+    def __init__(self, rollout: Optional[Callable],
+                 learn: Optional[Callable],
                  params: Any, opt_state: Any,
                  carries: Optional[List[Any]] = None,
                  num_samplers: Optional[int] = None, *,
-                 backend: Optional[SamplerBackend] = None):
+                 backend: Optional[SamplerBackend] = None,
+                 train_step: Optional[Callable] = None,
+                 plane_state: Any = None):
         if backend is None:
             assert rollout is not None and carries is not None
             backend = InlineBackend(rollout, carries)
         if num_samplers is not None:
             assert backend.num_samplers == num_samplers
+        assert learn is not None or train_step is not None
         self.backend = backend
-        self.learn = jax.jit(learn)
+        self.learn = jax.jit(learn) if learn is not None else None
+        self._train_step = (jax.jit(train_step)
+                            if train_step is not None else None)
+        self.plane_state = plane_state
         self.params = params
         self.opt_state = opt_state
         self.num_samplers = backend.num_samplers
         self.timer = PhaseTimer()
         self.logs: List[IterationLog] = []
 
+    @property
+    def buffer_state(self):
+        return None if self.plane_state is None else self.plane_state[0]
+
     def run(self, iterations: int) -> List[IterationLog]:
         for it in range(iterations):
             merged, stats = self.backend.collect(self.params)
-            self.params, self.opt_state, _, learn_time = timed_learn(
-                self.learn, self.params, self.opt_state, merged)
+            if self._train_step is not None:
+                (self.params, self.opt_state, self.plane_state, _,
+                 learn_time) = timed_train_step(
+                     self._train_step, self.params, self.opt_state,
+                     self.plane_state, merged)
+            else:
+                self.params, self.opt_state, _, learn_time = timed_learn(
+                    self.learn, self.params, self.opt_state, merged)
             record_log(self.logs, self.timer,
                        assemble_log(it, stats.per_sampler_seconds,
                                     learn_time, merged, stats.samples))
@@ -131,12 +169,18 @@ class AsyncOrchestrator:
                      PolicyStore.publish(params)
     """
 
-    def __init__(self, rollout: Callable, learn: Callable,
+    def __init__(self, rollout: Callable, learn: Optional[Callable],
                  params: Any, opt_state: Any, carries: List[Any],
                  num_samplers: int, min_batches_per_update: int = 1,
-                 queue_size: int = 64):
+                 queue_size: int = 64, *,
+                 train_step: Optional[Callable] = None,
+                 plane_state: Any = None):
         self.rollout = jax.jit(rollout)
-        self.learn = jax.jit(learn)
+        assert learn is not None or train_step is not None
+        self.learn = jax.jit(learn) if learn is not None else None
+        self._train_step = (jax.jit(train_step)
+                            if train_step is not None else None)
+        self.plane_state = plane_state
         self.store = PolicyStore(params)
         self.expq = ExperienceQueue(maxsize=queue_size)
         self.opt_state = opt_state
@@ -147,17 +191,22 @@ class AsyncOrchestrator:
         self.logs: List[IterationLog] = []
         self._stop = threading.Event()
 
+    @property
+    def buffer_state(self):
+        return None if self.plane_state is None else self.plane_state[0]
+
     # ------------------------------------------------------------ threads
     def _sampler_loop(self, i: int) -> None:
         while not self._stop.is_set():
             params, version = self.store.read()
             self.carries[i], traj, dt = timed_rollout(
                 self.rollout, params, self.carries[i])
-            try:
-                self.expq.put(Experience(traj, version, i, dt), timeout=5.0)
-            except Exception:
-                if self._stop.is_set():
-                    return
+            # on overflow the experience is dropped and counted
+            # (ExperienceQueue.drop_count -> IterationLog.queue_drops)
+            if (not self.expq.put(Experience(traj, version, i, dt),
+                                  timeout=5.0)
+                    and self._stop.is_set()):
+                return
 
     def _learner_loop(self, updates: int) -> None:
         import queue as _q
@@ -175,13 +224,20 @@ class AsyncOrchestrator:
             wait = time.perf_counter() - t_wait0
             merged = merge_trajs([e.traj for e in exps])
             params, _ = self.store.read()
-            params, self.opt_state, _, learn_time = timed_learn(
-                self.learn, params, self.opt_state, merged)
+            if self._train_step is not None:
+                (params, self.opt_state, self.plane_state, _,
+                 learn_time) = timed_train_step(
+                     self._train_step, params, self.opt_state,
+                     self.plane_state, merged)
+            else:
+                params, self.opt_state, _, learn_time = timed_learn(
+                    self.learn, params, self.opt_state, merged)
             self.store.publish(params)
             record_log(self.logs, self.timer,
                        assemble_log(it, [e.collect_seconds for e in exps],
                                     learn_time, merged,
-                                    staleness=self.expq.mean_staleness()))
+                                    staleness=self.expq.mean_staleness(),
+                                    queue_drops=self.expq.drop_count))
             self.timer.add("collect_wait", wait)
 
     # ---------------------------------------------------------------- run

@@ -55,17 +55,31 @@ class Experience:
 
 
 class ExperienceQueue:
-    """Bounded FIFO with staleness accounting."""
+    """Bounded FIFO with staleness and overflow-drop accounting.
+
+    ``drop_count`` counts experiences lost because the queue stayed full
+    past the producer's timeout — the async runtime's backpressure signal
+    (samplers outrunning the learner), surfaced per iteration as
+    ``IterationLog.queue_drops`` so it is measurable instead of invisible.
+    """
 
     def __init__(self, maxsize: int = 64):
         self._q: "queue.Queue[Experience]" = queue.Queue(maxsize=maxsize)
         self.put_count = 0
+        self.drop_count = 0
         self.staleness: List[int] = []
         self.queue_wait: List[float] = []
 
-    def put(self, exp: Experience, timeout: Optional[float] = None) -> None:
-        self._q.put(exp, timeout=timeout)
+    def put(self, exp: Experience, timeout: Optional[float] = None) -> bool:
+        """Enqueue; on overflow (still full after ``timeout``) drop the
+        experience, count it, and return False."""
+        try:
+            self._q.put(exp, timeout=timeout)
+        except queue.Full:
+            self.drop_count += 1
+            return False
         self.put_count += 1
+        return True
 
     def get(self, learner_version: int, timeout: Optional[float] = None
             ) -> Experience:

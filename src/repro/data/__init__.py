@@ -1,1 +1,1 @@
-from repro.data import replay, trajectory  # noqa: F401
+from repro.data import buffers, replay, trajectory  # noqa: F401

@@ -1,0 +1,327 @@
+"""The experience plane: device-resident experience buffers.
+
+One ``ExperienceBuffer`` protocol, three jittable implementations,
+registered under the registry kind ``"buffer"`` and selected per
+experiment via ``ExperimentSpec.buffer`` / ``buffer_kwargs``:
+
+* ``fifo``        — on-policy trajectory pass-through: the latest merged
+  trajectory *is* the buffer contents. ``add`` replaces, ``sample``
+  returns it verbatim, so an on-policy learner sees exactly the batch the
+  backends collected (``ppo`` × ``inline`` stays bitwise-identical to the
+  pre-plane path).
+* ``uniform``     — the classic replay ring (``data/replay.py``),
+  generalized with n-step returns: trajectories are flattened into
+  transitions at ``add`` time, rewards are aggregated over ``n_step``
+  steps and each stored transition carries its own bootstrap
+  ``discounts`` (= gamma^n, or 0 past a terminal), so learners never need
+  to know ``n``.
+* ``prioritized`` — proportional prioritized replay (Schaul et al.,
+  2015): a sum-tree (stored as a tuple of per-level arrays, all jittable)
+  supports O(log capacity) stratified sampling by priority;
+  ``sample`` returns importance weights (beta-corrected, normalized to
+  max 1) and slot ``indices`` so the learner can feed TD errors back
+  through ``update_priorities``.
+
+All state is a pytree of fixed-shape device arrays, so buffer state can
+live inside a donated ``lax.scan`` carry (the fused engine), flow through
+jitted train steps without host round-trips (sync/async), and ride
+mesh-sharded trajectories (the sharded backend). See DESIGN.md §4.
+
+Invariant (shared with ``data/replay.py``): sampling an *empty* buffer is
+a caller error. The composed train step (``algos.api.make_train_step``)
+always observes a trajectory before sampling, so ``size >= 1`` holds by
+construction; ``replay.sample`` raises eagerly when called outside jit
+with ``size == 0``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+from repro.data import replay
+
+
+@runtime_checkable
+class ExperienceBuffer(Protocol):
+    """Pure-function buffer: state in, state out — owned by the runner.
+
+    ``kind`` is ``"trajectory"`` (the sampled batch is a whole trajectory,
+    for on-policy learners) or ``"transitions"`` (flat replay minibatches,
+    for off-policy learners); ``experiment.build`` validates algo/buffer
+    compatibility through it.
+    """
+
+    name: str
+    kind: str
+
+    def init(self, example: Any) -> Any:
+        """Allocate zeroed device storage shaped like ``example``."""
+        ...
+
+    def add(self, state: Any, traj: Dict[str, jnp.ndarray]) -> Any:
+        """Absorb one collected trajectory batch. Jittable."""
+        ...
+
+    def sample(self, state: Any, key) -> Dict[str, jnp.ndarray]:
+        """Draw one learner batch. Jittable."""
+        ...
+
+    def update_priorities(self, state: Any, indices, priorities) -> Any:
+        """Feed per-sample TD errors back (no-op unless prioritized)."""
+        ...
+
+
+# ==================================================== n-step preprocessing
+def nstep_transitions(traj: Dict[str, jnp.ndarray], n_step: int,
+                      gamma: float) -> Dict[str, jnp.ndarray]:
+    """Flatten a time-major trajectory into n-step transitions.
+
+    Input arrays are ``(T, B, ...)`` with keys ``obs/actions/rewards/
+    dones/next_obs``. For each start ``t <= T - n`` the transition carries
+
+        rewards    = sum_{k<n} gamma^k * r_{t+k}   (truncated at a done)
+        next_obs   = next_obs_{t+n-1}
+        discounts  = gamma^n if no done inside the window else 0
+
+    so the learner's bootstrap is always ``rewards + discounts * Q(next)``
+    regardless of ``n``. The last ``n - 1`` steps of the trajectory have
+    no full window and are dropped (their experience returns in the next
+    iteration's overlap-free window). Output arrays are flat
+    ``((T-n+1)*B, ...)``.
+    """
+    T = traj["rewards"].shape[0]
+    if n_step < 1 or n_step > T:
+        raise ValueError(
+            f"n_step={n_step} must be in [1, horizon={T}]")
+    Tn = T - n_step + 1
+    rewards = jnp.zeros_like(traj["rewards"][:Tn], dtype=jnp.float32)
+    notdone = jnp.ones_like(rewards)
+    for k in range(n_step):
+        rewards = rewards + (gamma ** k) * notdone * traj["rewards"][k:k + Tn]
+        notdone = notdone * (1.0 - traj["dones"][k:k + Tn]
+                             .astype(jnp.float32))
+    out = {
+        "obs": traj["obs"][:Tn],
+        "actions": traj["actions"][:Tn],
+        "rewards": rewards,
+        "next_obs": traj["next_obs"][n_step - 1:n_step - 1 + Tn],
+        "discounts": (gamma ** n_step) * notdone,
+    }
+    return {k: v.reshape((-1,) + v.shape[2:]) for k, v in out.items()}
+
+
+def transition_storage_example(example: Dict[str, jnp.ndarray]
+                               ) -> Dict[str, jnp.ndarray]:
+    """Normalize a per-transition example to the stored schema: ``dones``
+    dissolves into per-transition ``discounts`` at add time."""
+    out = {k: v for k, v in example.items() if k != "dones"}
+    out.setdefault("discounts",
+                   jnp.zeros(example["rewards"].shape, jnp.float32))
+    return out
+
+
+# ===================================================================== fifo
+class FifoBuffer:
+    """On-policy pass-through: the buffer *is* the latest trajectory.
+
+    ``add`` replaces the stored trajectory wholesale and ``sample``
+    returns it untouched — the identity schedule, which keeps on-policy
+    learners bitwise-identical to the pre-plane direct ``learn(traj)``
+    path while still flowing through the same plane seam (and the same
+    donated scan carry under the fused engine).
+    """
+
+    name = "fifo"
+    kind = "trajectory"
+    passthrough = True          # train step may skip the PRNG/scan machinery
+
+    def init(self, example):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), example)
+
+    def add(self, state, traj):
+        return traj
+
+    def sample(self, state, key):
+        return state
+
+    def update_priorities(self, state, indices, priorities):
+        return state
+
+
+# ================================================================== uniform
+class UniformBuffer:
+    """Uniform replay ring with n-step returns — DDPG's old in-``opt_state``
+    ring, promoted to a first-class runner-owned buffer."""
+
+    name = "uniform"
+    kind = "transitions"
+    passthrough = False
+
+    def __init__(self, capacity: int = 50_000, batch_size: int = 128,
+                 n_step: int = 1, gamma: float = 0.99):
+        self.capacity = int(capacity)
+        self.batch_size = int(batch_size)
+        self.n_step = int(n_step)
+        self.gamma = float(gamma)
+
+    def init(self, example: Dict[str, jnp.ndarray]) -> replay.ReplayState:
+        return replay.init_replay(self.capacity,
+                                  transition_storage_example(example))
+
+    def add(self, state: replay.ReplayState, traj) -> replay.ReplayState:
+        return replay.add_batch(state,
+                                nstep_transitions(traj, self.n_step,
+                                                  self.gamma))
+
+    def sample(self, state: replay.ReplayState, key
+               ) -> Dict[str, jnp.ndarray]:
+        idx = replay.sample_indices(state, key, self.batch_size)
+        batch = {k: v[idx] for k, v in state.storage.items()}
+        batch["indices"] = idx
+        batch["weights"] = jnp.ones((self.batch_size,), jnp.float32)
+        return batch
+
+    def update_priorities(self, state, indices, priorities):
+        return state
+
+
+# ============================================================== prioritized
+class SumTree(NamedTuple):
+    """A binary sum-tree as a tuple of per-level arrays.
+
+    ``levels[0]`` are the leaf masses (one per replay slot, capacity a
+    power of two); ``levels[k]`` holds pairwise sums of ``levels[k-1]``;
+    ``levels[-1]`` is the total mass ``(1,)``. A static tuple of arrays is
+    a plain pytree, so the whole tree lives in jit carries and donated
+    scan state like any other buffer array.
+    """
+
+    levels: Tuple[jnp.ndarray, ...]
+
+    @property
+    def total(self) -> jnp.ndarray:
+        return self.levels[-1][0]
+
+
+def sumtree_build(leaves: jnp.ndarray) -> SumTree:
+    levels = [leaves]
+    while levels[-1].shape[0] > 1:
+        levels.append(levels[-1].reshape(-1, 2).sum(axis=-1))
+    return SumTree(tuple(levels))
+
+
+def sumtree_find(tree: SumTree, mass: jnp.ndarray) -> jnp.ndarray:
+    """Descend from the root: the leaf whose prefix-sum interval holds
+    ``mass``. O(log capacity) gathers; vmap over a batch of masses."""
+    idx = jnp.zeros((), jnp.int32)
+    for level in tree.levels[-2::-1]:
+        idx = idx * 2
+        left = level[idx]
+        go_right = mass >= left
+        mass = jnp.where(go_right, mass - left, mass)
+        idx = jnp.where(go_right, idx + 1, idx)
+    return idx
+
+
+def sumtree_update(tree: SumTree, idx: jnp.ndarray,
+                   leaf_values: jnp.ndarray) -> SumTree:
+    """Set leaf masses at ``idx`` and recompute only the touched
+    root-to-leaf paths — O(B log capacity) instead of an O(capacity)
+    rebuild. Duplicate indices are safe: parents are recomputed from the
+    post-scatter children, so every write of a parent stores the same
+    (consistent) sum regardless of which duplicate leaf write won."""
+    levels = list(tree.levels)
+    levels[0] = levels[0].at[idx].set(leaf_values)
+    child = idx
+    for k in range(len(levels) - 1):
+        parent = child // 2
+        sums = levels[k][2 * parent] + levels[k][2 * parent + 1]
+        levels[k + 1] = levels[k + 1].at[parent].set(sums)
+        child = parent
+    return SumTree(tuple(levels))
+
+
+class PrioritizedState(NamedTuple):
+    ring: replay.ReplayState     # storage + write index + filled size
+    tree: SumTree                # leaf i = priority_i ** alpha
+    max_priority: jnp.ndarray    # running max of raw (pre-alpha) priority
+
+
+class PrioritizedBuffer:
+    """Proportional prioritized replay with importance-weighted sampling.
+
+    New transitions enter at the running max priority (so they are seen at
+    least once); ``sample`` draws stratified masses over the sum-tree and
+    returns ``weights`` ``(N * P(i))^-beta / max`` plus ``indices``;
+    learners return per-sample ``priorities`` (|TD error|) from ``learn``
+    and the train step routes them into ``update_priorities``.
+
+    ``capacity`` is rounded up to the next power of two (the tree wants a
+    complete binary layout; unfilled slots carry zero mass and are never
+    drawn).
+    """
+
+    name = "prioritized"
+    kind = "transitions"
+    passthrough = False
+
+    def __init__(self, capacity: int = 50_000, batch_size: int = 128,
+                 n_step: int = 1, gamma: float = 0.99,
+                 alpha: float = 0.6, beta: float = 0.4, eps: float = 1e-6):
+        self.capacity = 1 << (int(capacity) - 1).bit_length()
+        self.batch_size = int(batch_size)
+        self.n_step = int(n_step)
+        self.gamma = float(gamma)
+        self.alpha = float(alpha)
+        self.beta = float(beta)
+        self.eps = float(eps)
+
+    def init(self, example: Dict[str, jnp.ndarray]) -> PrioritizedState:
+        ring = replay.init_replay(self.capacity,
+                                  transition_storage_example(example))
+        tree = sumtree_build(jnp.zeros((self.capacity,), jnp.float32))
+        return PrioritizedState(ring, tree, jnp.ones((), jnp.float32))
+
+    def add(self, state: PrioritizedState, traj) -> PrioritizedState:
+        flat = nstep_transitions(traj, self.n_step, self.gamma)
+        n = flat["rewards"].shape[0]
+        idx = (state.ring.index + jnp.arange(n)) % self.capacity
+        ring = replay.add_batch(state.ring, flat)
+        tree = sumtree_update(
+            state.tree, idx,
+            jnp.full((n,), state.max_priority ** self.alpha))
+        return PrioritizedState(ring, tree, state.max_priority)
+
+    def sample(self, state: PrioritizedState, key
+               ) -> Dict[str, jnp.ndarray]:
+        replay.ensure_nonempty(state.ring)
+        B = self.batch_size
+        total = state.tree.total
+        # stratified masses: one per equal slice of the total, so the draw
+        # covers the distribution even at small batch sizes
+        u = (jnp.arange(B, dtype=jnp.float32)
+             + jax.random.uniform(key, (B,))) / B
+        idx = jax.vmap(lambda m: sumtree_find(state.tree, m))(u * total)
+        idx = jnp.minimum(idx, jnp.maximum(state.ring.size, 1) - 1)
+        probs = state.tree.levels[0][idx] / jnp.maximum(total, self.eps)
+        weights = (jnp.maximum(state.ring.size, 1).astype(jnp.float32)
+                   * jnp.maximum(probs, self.eps)) ** (-self.beta)
+        batch = {k: v[idx] for k, v in state.ring.storage.items()}
+        batch["indices"] = idx
+        batch["weights"] = weights / jnp.max(weights)
+        return batch
+
+    def update_priorities(self, state: PrioritizedState, indices,
+                          priorities) -> PrioritizedState:
+        p = jnp.abs(priorities) + self.eps
+        tree = sumtree_update(state.tree, indices, p ** self.alpha)
+        return PrioritizedState(state.ring, tree,
+                                jnp.maximum(state.max_priority, jnp.max(p)))
+
+
+registry.register("buffer", "fifo", FifoBuffer)
+registry.register("buffer", "uniform", UniformBuffer)
+registry.register("buffer", "prioritized", PrioritizedBuffer)

@@ -32,8 +32,32 @@ def add_batch(state: ReplayState, batch: Dict[str, jnp.ndarray]
                        jnp.minimum(state.size + n, cap))
 
 
+def ensure_nonempty(state: ReplayState) -> None:
+    """Eager form of the sampling invariant: callers must ``add_batch``
+    before sampling (``size >= 1``). An empty ring used to silently yield
+    zero-filled slot-0 transitions; outside a trace the violation now
+    raises, and under jit the index clamp in ``sample_indices`` keeps
+    draws in ``[0, max(size, 1))`` so the documented invariant is the
+    only defense — the composed train step
+    (``algos.api.make_train_step``) upholds it by always observing a
+    trajectory before sampling."""
+    if not isinstance(state.size, jax.core.Tracer) and int(state.size) == 0:
+        raise ValueError(
+            "sample() on an empty replay buffer — add_batch at least one "
+            "transition first (an empty ring would yield zero-filled "
+            "slot-0 transitions)")
+
+
+def sample_indices(state: ReplayState, key, batch_size: int) -> jnp.ndarray:
+    """Uniform slot indices over the filled prefix (guarded; the one
+    index-draw both ``sample`` and the plane's uniform buffer use)."""
+    ensure_nonempty(state)
+    return jax.random.randint(key, (batch_size,), 0,
+                              jnp.maximum(state.size, 1))
+
+
 def sample(state: ReplayState, key, batch_size: int
            ) -> Dict[str, jnp.ndarray]:
-    idx = jax.random.randint(key, (batch_size,), 0,
-                             jnp.maximum(state.size, 1))
+    """Draw ``batch_size`` uniform transitions from the filled prefix."""
+    idx = sample_indices(state, key, batch_size)
     return {k: v[idx] for k, v in state.storage.items()}

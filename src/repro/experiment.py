@@ -2,19 +2,31 @@
 
     from repro.experiment import ExperimentSpec, run
 
-    result = run(ExperimentSpec(env="pendulum", algo="trpo",
+    result = run(ExperimentSpec(env="pendulum", algo="sac",
+                                buffer="prioritized",
                                 backend="threaded"))
     for log in result.logs: ...
 
 ``ExperimentSpec`` names every choice an experiment makes — env, algo,
-backend, runtime, model and schedule — as registry keys plus plain data,
-so a spec serialises losslessly (``to_dict``/``from_dict`` round-trip) and
-a checkpoint's metadata alone reproduces its run. ``build`` resolves the
-spec through the unified registry (``repro.registry``) into a runner;
-``run`` builds and drives it. ``launch/train.py``, ``examples/*`` and
-``benchmarks/*`` all delegate here, which is what makes every algorithm
-(ppo/trpo/ddpg) available on every backend (inline/threaded/sharded) and
-runtime (sync/async/fused) through one seam.
+buffer, backend, runtime, model and schedule — as registry keys plus
+plain data, so a spec serialises losslessly (``to_dict``/``from_dict``
+round-trip) and a checkpoint's metadata alone reproduces its run.
+``build`` resolves the spec through the unified registry
+(``repro.registry``) into a runner; ``run`` builds and drives it.
+``launch/train.py``, ``examples/*`` and ``benchmarks/*`` all delegate
+here, which is what makes every algorithm (ppo/trpo/ddpg/sac) available
+on every backend (inline/threaded/sharded) and runtime (sync/async/fused)
+through one seam.
+
+The experience plane: ``buffer`` selects how collected experience is
+stored and re-sampled (``fifo`` trajectory pass-through for on-policy
+algos; ``uniform`` / ``prioritized`` replay for off-policy ones —
+``buffer_kwargs`` carries capacity/batch_size/n_step/...). ``build``
+composes algo + buffer into one jittable train step
+(``algos.api.make_train_step``) and hands the runner the initial
+``plane_state = (buffer_state, key)``; the runner owns it explicitly, so
+``result.runner.buffer_state`` is inspectable and ``opt_state`` stays
+purely the optimizer's.
 """
 from __future__ import annotations
 
@@ -24,12 +36,18 @@ from typing import Any, Dict, List, Optional
 import jax
 
 from repro import registry
+from repro.algos.api import make_train_step
 from repro.core import sampler as sampler_mod
-from repro.core.backends import make_backend
+from repro.core.backends import make_backend, merge_trajs
 from repro.core.fused import FusedRunner
 from repro.core.orchestrator import AsyncOrchestrator, IterationLog, SyncRunner
 
 RUNTIMES = ("sync", "async", "fused")
+
+# fold_in tag deriving the plane's sampling key from the schedule seed —
+# distinct from the params key (PRNGKey(seed)) and every sampler carry
+# key (PRNGKey(seed + i))
+_PLANE_KEY_TAG = 0xB0FF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,10 +69,13 @@ class ExperimentSpec:
     algo: str = "ppo"
     backend: str = "inline"               # inline | threaded | sharded
     runtime: str = "sync"                 # sync | async | fused
+    buffer: Optional[str] = None          # fifo | uniform | prioritized
+    #                                       (None: the algo's default)
     model: Dict[str, Any] = dataclasses.field(default_factory=dict)
     schedule: Schedule = dataclasses.field(default_factory=Schedule)
     env_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    buffer_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -77,6 +98,50 @@ class ExperimentResult:
     @property
     def params(self):
         return self.runner.params
+
+
+def _resolve_buffer(spec: ExperimentSpec, algo):
+    """Buffer name -> instance, validated against the algo's batch diet."""
+    name = spec.buffer or getattr(algo, "default_buffer", "fifo")
+    if not registry.contains("buffer", name):
+        raise KeyError(f"unknown buffer {name!r}; choose from "
+                       f"{list(registry.choices('buffer'))}")
+    kwargs = dict(spec.buffer_kwargs)
+    on_policy = bool(getattr(algo, "on_policy", True))
+    buffer = registry.make("buffer", name, **kwargs)
+    if on_policy and buffer.kind != "trajectory":
+        raise ValueError(
+            f"algo {spec.algo!r} is on-policy and learns from whole "
+            f"trajectories; buffer {name!r} serves flat transition "
+            f"minibatches — use buffer='fifo'")
+    if not on_policy and buffer.kind != "transitions":
+        raise ValueError(
+            f"algo {spec.algo!r} is off-policy and learns from replay "
+            f"minibatches; buffer {name!r} passes trajectories through — "
+            f"use buffer='uniform' or 'prioritized'")
+    # one source of truth for the discount: the buffer's n-step transform
+    # bakes gamma into per-transition ``discounts``, so its gamma must be
+    # the algorithm's — a second knob would silently win over algo_kwargs
+    algo_gamma = getattr(getattr(algo, "cfg", None), "gamma", None)
+    if buffer.kind == "transitions" and algo_gamma is not None:
+        if "gamma" in kwargs:
+            raise ValueError(
+                "set the discount through algo_kwargs={'gamma': ...} — "
+                "the buffer derives its n-step discount from the "
+                "algorithm's gamma, so buffer_kwargs['gamma'] would "
+                "silently diverge from it")
+        buffer.gamma = float(algo_gamma)
+    return buffer
+
+
+def _traj_zeros(rollout, params, carries):
+    """Zeroed merged-trajectory pytree (the fifo buffer's storage shape),
+    via ``eval_shape`` so no rollout actually runs."""
+    shapes = jax.eval_shape(
+        lambda p, cs: merge_trajs([rollout(p, c)[1] for c in cs]),
+        params, list(carries))
+    return jax.tree.map(
+        lambda s: jax.numpy.zeros(s.shape, s.dtype), shapes)
 
 
 def build(spec: ExperimentSpec):
@@ -109,16 +174,28 @@ def build(spec: ExperimentSpec):
     env = registry.make("env", spec.env, **dict(spec.env_kwargs))
     algo = registry.make("algo", spec.algo,
                          **{**dict(spec.model), **dict(spec.algo_kwargs)})
+    buffer = _resolve_buffer(spec, algo)
     sched = spec.schedule
     params, opt_state = algo.init(jax.random.PRNGKey(sched.seed), env)
     rollout = algo.make_rollout(env, sched.horizon)
+    train_step = make_train_step(algo, buffer)
+    plane_key = jax.random.fold_in(jax.random.PRNGKey(sched.seed),
+                                   _PLANE_KEY_TAG)
+
+    def plane_for(carries):
+        if buffer.kind == "transitions":
+            example = algo.transition_example(env)
+        else:
+            example = _traj_zeros(rollout, params, carries)
+        return (buffer.init(example), plane_key)
 
     if spec.runtime == "fused":
         carry = sampler_mod.init_env_carry(
             env, jax.random.PRNGKey(sched.seed), sched.global_batch)
-        return FusedRunner(env, algo.learn, params, opt_state, carry,
+        return FusedRunner(env, None, params, opt_state, carry,
                            horizon=sched.horizon, chunk=sched.chunk,
-                           rollout=rollout)
+                           rollout=rollout, train_step=train_step,
+                           plane_state=plane_for([carry]))
 
     per = sampler_mod.split_batch(sched.global_batch, sched.num_samplers)
     carries = [
@@ -128,14 +205,16 @@ def build(spec: ExperimentSpec):
     ]
     if spec.runtime == "async":
         return AsyncOrchestrator(
-            rollout, algo.learn, params, opt_state, carries,
+            rollout, None, params, opt_state, carries,
             sched.num_samplers,
-            min_batches_per_update=sched.min_batches_per_update)
+            min_batches_per_update=sched.min_batches_per_update,
+            train_step=train_step, plane_state=plane_for(carries))
     backend = make_backend(spec.backend, rollout, carries,
                            env=env, horizon=sched.horizon,
                            step_keys=algo.step_keys,
                            tail_keys=algo.tail_keys)
-    return SyncRunner(None, algo.learn, params, opt_state, backend=backend)
+    return SyncRunner(None, None, params, opt_state, backend=backend,
+                      train_step=train_step, plane_state=plane_for(carries))
 
 
 def run(spec: ExperimentSpec,

@@ -2,9 +2,11 @@
 
 Two modes, selected by --mode:
 * ``rl``  — the paper's experiment through the unified experiment API:
-  any registered algo (ppo/trpo/ddpg) + N parallel samplers on a pure-JAX
-  env, on any backend/runtime. The CLI only builds an ``ExperimentSpec``
-  and delegates to ``repro.experiment.run``; CPU-runnable.
+  any registered algo (ppo/trpo/ddpg/sac) + N parallel samplers on a
+  pure-JAX env, on any backend/runtime, with any experience buffer
+  (``--buffer {fifo,uniform,prioritized}``). The CLI only builds an
+  ``ExperimentSpec`` and delegates to ``repro.experiment.run``;
+  CPU-runnable.
 * ``lm``  — sequence-model PPO (RLHF-style): synthetic rollout batches
   drive ``make_lm_train_step`` under a mesh, with checkpointing. On CPU use
   a reduced arch (``--arch <id>-reduced``); full configs belong to the
@@ -15,8 +17,9 @@ reproducible from the checkpoint directory alone.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --mode rl --env pendulum \
-      --algo {ppo,trpo,ddpg} --num-samplers 4 --iterations 20 \
-      --backend {inline,threaded,sharded,fused}
+      --algo {ppo,trpo,ddpg,sac} --num-samplers 4 --iterations 20 \
+      --backend {inline,threaded,sharded,fused} \
+      [--buffer prioritized --replay-capacity 100000 --n-step 3]
   PYTHONPATH=src python -m repro.launch.train --mode lm \
       --arch mixtral-8x7b-reduced --steps 5
 """
@@ -54,13 +57,22 @@ def spec_from_args(args) -> ExperimentSpec:
     # only forward --lr when the user set it, so each algorithm's own
     # learning-rate defaults (ppo 3e-4, trpo vf 1e-3, ddpg 1e-3) apply
     algo_kwargs = {} if args.lr is None else {"lr": args.lr}
+    # same for the buffer: only overrides the user set reach the spec, so
+    # each buffer kind's own defaults apply and ckpt metadata stays honest
+    buffer_kwargs = {k: v for k, v in [
+        ("capacity", args.replay_capacity),
+        ("batch_size", args.replay_batch),
+        ("n_step", args.n_step),
+    ] if v is not None}
     return ExperimentSpec(
         env=args.env,
         algo=args.algo,
         backend=backend,
         runtime=runtime,
+        buffer=args.buffer,
         model={"hidden": args.hidden},
         algo_kwargs=algo_kwargs,
+        buffer_kwargs=buffer_kwargs,
         schedule=Schedule(
             num_samplers=args.num_samplers,
             global_batch=args.global_batch,
@@ -141,6 +153,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="inline",
                     choices=registry.choices("backend") + ("fused",))
+    ap.add_argument("--buffer", default=None,
+                    choices=registry.choices("buffer"),
+                    help="experience buffer kind (default: the "
+                         "algorithm's own — fifo on-policy, uniform "
+                         "off-policy)")
+    ap.add_argument("--replay-capacity", type=int, default=None,
+                    help="off-policy buffers: ring capacity")
+    ap.add_argument("--replay-batch", type=int, default=None,
+                    help="off-policy buffers: learner minibatch size")
+    ap.add_argument("--n-step", type=int, default=None,
+                    help="off-policy buffers: n-step return horizon")
     ap.add_argument("--chunk", type=int, default=None,
                     help="fused backend: iterations per device dispatch "
                          "(default: all of --iterations in one chunk)")

@@ -1,5 +1,6 @@
 """The unified registry: one ``register``/``make`` seam for every
-pluggable component — envs, algos, sampler backends, and model archs.
+pluggable component — envs, algos, sampler backends, experience buffers,
+and model archs.
 
 Before this module the framework kept three inconsistent ad-hoc tables
 (``envs.__init__._REGISTRY``, ``configs.__init__._ARCH_MODULES`` and the
@@ -14,7 +15,8 @@ now goes through here:
 
 Kinds are created on first registration. The built-in entries for each
 kind live with their implementations (``repro.envs``, ``repro.algos.api``,
-``repro.core.backends``, ``repro.configs``); ``make``/``choices`` lazily
+``repro.core.backends``, ``repro.data.buffers``, ``repro.configs``);
+``make``/``choices`` lazily
 import those modules so lookup works regardless of import order.
 
 Errors are uniform: registering a duplicate name raises ``ValueError``;
@@ -33,6 +35,7 @@ _BUILTIN_MODULES = {
     "env": "repro.envs",
     "algo": "repro.algos.api",
     "backend": "repro.core.backends",
+    "buffer": "repro.data.buffers",
     "arch": "repro.configs",
 }
 

@@ -1,0 +1,269 @@
+"""Experience-plane tests: buffer semantics (wraparound, n-step,
+prioritized sampling distribution + importance weights, sum-tree
+invariants), the empty-ring guard, and fused-vs-stepped parity for an
+off-policy algorithm (buffer state riding the donated scan carry)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import experiment
+from repro.data.buffers import (
+    FifoBuffer,
+    PrioritizedBuffer,
+    UniformBuffer,
+    nstep_transitions,
+    sumtree_build,
+    sumtree_find,
+    sumtree_update,
+)
+from repro.data.replay import init_replay, sample
+from repro.experiment import ExperimentSpec, Schedule
+
+
+def make_traj(T, B, obs_dim=3, act_dim=2, reward=1.0, dones=None):
+    """A recognizable off-policy trajectory batch: obs[t] = t."""
+    t_grid = jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.float32)[:, None, None], (T, B, obs_dim))
+    return {
+        "obs": t_grid,
+        "actions": jnp.zeros((T, B, act_dim)),
+        "rewards": jnp.full((T, B), reward),
+        "dones": (jnp.zeros((T, B), bool) if dones is None else dones),
+        "next_obs": t_grid + 1.0,
+    }
+
+
+def _example(obs_dim=3, act_dim=2):
+    return {
+        "obs": jnp.zeros((1, obs_dim)),
+        "actions": jnp.zeros((1, act_dim)),
+        "rewards": jnp.zeros((1,)),
+        "next_obs": jnp.zeros((1, obs_dim)),
+        "dones": jnp.zeros((1,), bool),
+    }
+
+
+# =============================================================== fifo
+def test_fifo_is_identity_passthrough():
+    buf = FifoBuffer()
+    traj = make_traj(4, 2)
+    state = buf.init(traj)
+    assert all(float(jnp.sum(jnp.abs(v))) == 0.0
+               for v in jax.tree.leaves(state))
+    state = buf.add(state, traj)
+    out = buf.sample(state, jax.random.PRNGKey(0))
+    for k in traj:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(traj[k]))
+
+
+# ======================================================== ring wraparound
+@pytest.mark.parametrize("cap,iters", [(64, 1), (64, 3), (32, 5), (17, 4)])
+def test_uniform_ring_wraparound(cap, iters):
+    """Property: after adding k trajectories of T*B transitions each, the
+    ring holds min(cap, k*T*B) and the write head stays in range; once
+    wrapped, only the newest `capacity` transitions survive."""
+    T, B = 4, 2
+    buf = UniformBuffer(capacity=cap, batch_size=8)
+    state = buf.init(_example())
+    for k in range(iters):
+        state = buf.add(state, make_traj(T, B, reward=float(k)))
+    n = iters * T * B
+    assert int(state.size) == min(cap, n)
+    assert 0 <= int(state.index) < cap
+    if n > cap:
+        # oldest rewards were overwritten: the ring only holds the newest
+        survivors = np.asarray(state.storage["rewards"])
+        dropped = (n - cap) // (T * B)  # fully-overwritten trajectories
+        assert survivors.min() >= 0.0
+        assert set(np.unique(survivors)) <= set(
+            float(k) for k in range(dropped, iters))
+
+
+def test_uniform_sample_contract():
+    buf = UniformBuffer(capacity=64, batch_size=16)
+    state = buf.add(buf.init(_example()), make_traj(4, 2, reward=7.0))
+    batch = buf.sample(state, jax.random.PRNGKey(0))
+    assert set(batch) == {"obs", "actions", "rewards", "next_obs",
+                          "discounts", "indices", "weights"}
+    assert batch["rewards"].shape == (16,)
+    # only filled slots are drawn
+    assert np.all(np.asarray(batch["indices"]) < 8)
+    np.testing.assert_array_equal(np.asarray(batch["rewards"]),
+                                  np.full((16,), 7.0))
+    np.testing.assert_array_equal(np.asarray(batch["weights"]),
+                                  np.ones((16,)))
+
+
+# ================================================================= n-step
+def test_nstep_matches_hand_computation():
+    """n=2, gamma=0.5, a done inside one window: rewards truncate at the
+    terminal and its discount zeroes the bootstrap."""
+    T, B = 4, 1
+    dones = jnp.asarray([[False], [True], [False], [False]])
+    traj = make_traj(T, B, dones=dones)
+    traj["rewards"] = jnp.asarray([[1.0], [2.0], [3.0], [4.0]])
+    flat = nstep_transitions(traj, n_step=2, gamma=0.5)
+    assert flat["rewards"].shape == (3,)          # T - n + 1 windows
+    np.testing.assert_allclose(np.asarray(flat["rewards"]),
+                               [1.0 + 0.5 * 2.0,  # full window
+                                2.0,              # truncated at the done
+                                3.0 + 0.5 * 4.0])
+    np.testing.assert_allclose(np.asarray(flat["discounts"]),
+                               [0.0, 0.0, 0.25])  # gamma^2 when alive
+    # next_obs is the observation n steps ahead
+    np.testing.assert_allclose(np.asarray(flat["next_obs"][:, 0]),
+                               [2.0, 3.0, 4.0])
+
+
+def test_nstep_1_is_plain_transitions():
+    traj = make_traj(5, 2)
+    flat = nstep_transitions(traj, n_step=1, gamma=0.9)
+    assert flat["rewards"].shape == (10,)
+    np.testing.assert_allclose(np.asarray(flat["discounts"]),
+                               np.full((10,), 0.9))
+
+
+def test_nstep_rejects_bad_horizon():
+    with pytest.raises(ValueError, match="n_step"):
+        nstep_transitions(make_traj(4, 1), n_step=5, gamma=0.9)
+
+
+# =============================================================== sum-tree
+def test_sumtree_build_and_find():
+    leaves = jnp.asarray([1.0, 0.0, 2.0, 1.0])
+    tree = sumtree_build(leaves)
+    assert float(tree.total) == 4.0
+    for mass, leaf in [(0.5, 0), (1.5, 2), (2.9, 2), (3.5, 3)]:
+        assert int(sumtree_find(tree, jnp.float32(mass))) == leaf
+
+
+def test_sumtree_path_update_matches_full_rebuild():
+    """O(log cap) path recomputation leaves every tree level identical to
+    a from-scratch rebuild, including with duplicate indices."""
+    tree = sumtree_build(jnp.arange(16.0))
+    idx = jnp.asarray([3, 7, 7, 12, 0])
+    vals = jnp.asarray([1.0, 2.0, 2.0, 5.0, 0.5])
+    updated = sumtree_update(tree, idx, vals)
+    rebuilt = sumtree_build(updated.levels[0])
+    for a, b in zip(updated.levels, rebuilt.levels):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_prioritized_sampling_follows_priorities():
+    """Empirical draw frequencies track priority mass (alpha=1)."""
+    buf = PrioritizedBuffer(capacity=4, batch_size=4096, alpha=1.0,
+                            beta=0.4, eps=0.0)
+    state = buf.add(buf.init(_example()), make_traj(2, 2))  # fills 4 slots
+    priorities = jnp.asarray([1.0, 1.0, 2.0, 4.0])
+    state = buf.update_priorities(state, jnp.arange(4), priorities)
+    batch = buf.sample(state, jax.random.PRNGKey(0))
+    counts = np.bincount(np.asarray(batch["indices"]), minlength=4)
+    freqs = counts / counts.sum()
+    np.testing.assert_allclose(freqs, np.asarray(priorities) / 8.0,
+                               atol=0.02)
+
+
+def test_prioritized_importance_weights():
+    buf = PrioritizedBuffer(capacity=4, batch_size=512, alpha=1.0,
+                            beta=1.0, eps=0.0)
+    state = buf.add(buf.init(_example()), make_traj(2, 2))
+    state = buf.update_priorities(state, jnp.arange(4),
+                                  jnp.asarray([1.0, 1.0, 2.0, 4.0]))
+    batch = buf.sample(state, jax.random.PRNGKey(1))
+    idx = np.asarray(batch["indices"])
+    w = np.asarray(batch["weights"])
+    assert w.max() == pytest.approx(1.0)
+    # beta=1: weights are exactly inverse-proportional to priority, and
+    # the rarest transition carries the max weight
+    w_hi = w[idx == 3].mean()
+    w_lo = w[idx == 0].mean()
+    assert w_lo == pytest.approx(4.0 * w_hi, rel=1e-5)
+
+
+def test_prioritized_new_adds_get_max_priority():
+    buf = PrioritizedBuffer(capacity=8, batch_size=8, alpha=1.0)
+    state = buf.add(buf.init(_example()), make_traj(2, 2))
+    state = buf.update_priorities(state, jnp.arange(4),
+                                  jnp.asarray([0.1, 0.1, 0.1, 5.0]))
+    assert float(state.max_priority) == pytest.approx(5.0, rel=1e-5)
+    state = buf.add(state, make_traj(2, 2))        # slots 4..7
+    leaves = np.asarray(state.tree.levels[0])
+    np.testing.assert_allclose(leaves[4:], np.full((4,), 5.0), rtol=1e-5)
+
+
+def test_prioritized_capacity_rounds_to_power_of_two():
+    assert PrioritizedBuffer(capacity=100).capacity == 128
+    assert PrioritizedBuffer(capacity=64).capacity == 64
+
+
+# ==================================================== empty-ring guard
+def test_replay_sample_empty_raises():
+    """Regression: an empty ring used to silently yield zero-filled
+    slot-0 transitions; eagerly it now raises."""
+    state = init_replay(8, {"x": jnp.zeros((1, 2))})
+    with pytest.raises(ValueError, match="empty replay"):
+        sample(state, jax.random.PRNGKey(0), 4)
+
+
+@pytest.mark.parametrize("cls", [UniformBuffer, PrioritizedBuffer])
+def test_buffer_sample_empty_raises(cls):
+    """The plane-level samplers go through the same guard."""
+    buf = cls(capacity=8, batch_size=4)
+    with pytest.raises(ValueError, match="empty replay"):
+        buf.sample(buf.init(_example()), jax.random.PRNGKey(0))
+
+
+def test_buffer_gamma_comes_from_the_algo():
+    """One source of truth for the discount: buffer_kwargs['gamma'] is
+    rejected, and the algo's gamma reaches the n-step transform."""
+    spec = ExperimentSpec(env="pendulum", algo="ddpg",
+                          model={"hidden": 16},
+                          buffer_kwargs={"gamma": 0.5},
+                          schedule=Schedule(num_samplers=1, global_batch=2,
+                                            horizon=4, seed=0))
+    with pytest.raises(ValueError, match="algo_kwargs"):
+        experiment.build(spec)
+    runner = experiment.build(ExperimentSpec(
+        env="pendulum", algo="ddpg", model={"hidden": 16},
+        algo_kwargs={"gamma": 0.9, "updates_per_collect": 1},
+        buffer_kwargs={"capacity": 64, "batch_size": 4},
+        schedule=Schedule(num_samplers=1, global_batch=2, horizon=4,
+                          seed=0)))
+    runner.run(1)
+    # every stored transition's discount is gamma^1 = 0.9 (no terminals
+    # in a 4-step pendulum rollout)
+    discounts = np.asarray(runner.buffer_state.storage["discounts"][:8])
+    np.testing.assert_allclose(discounts, np.full((8,), 0.9), rtol=1e-6)
+
+
+# =============================================== fused-vs-stepped parity
+@pytest.mark.parametrize("buffer", ["uniform", "prioritized"])
+def test_fused_matches_stepped_offpolicy(buffer):
+    """The buffer-in-scan-carry path: a fused DDPG run (ring + sum-tree
+    inside the donated lax.scan carry) reproduces the stepped SyncRunner
+    run exactly — fusing the plane is a scheduling change, not a
+    numerical one."""
+    common = dict(
+        env="pendulum", algo="ddpg", model={"hidden": 16},
+        buffer=buffer,
+        buffer_kwargs={"capacity": 256, "batch_size": 16},
+        algo_kwargs={"updates_per_collect": 2},
+    )
+    sched = dict(num_samplers=1, global_batch=4, horizon=8, iterations=3,
+                 seed=0)
+    stepped = experiment.run(ExperimentSpec(
+        **common, backend="inline", runtime="sync",
+        schedule=Schedule(**sched)))
+    fused = experiment.run(ExperimentSpec(
+        **common, backend="inline", runtime="fused",
+        schedule=Schedule(**sched, chunk=3)))
+    for xa, xb in zip(jax.tree.leaves(stepped.params),
+                      jax.tree.leaves(fused.params)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    # and the planes agree too: same ring contents, same write head
+    for xa, xb in zip(jax.tree.leaves(stepped.runner.buffer_state),
+                      jax.tree.leaves(fused.runner.buffer_state)):
+        np.testing.assert_allclose(np.asarray(xa), np.asarray(xb),
+                                   rtol=1e-6, atol=1e-6)

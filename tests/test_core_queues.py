@@ -55,6 +55,21 @@ def test_experience_queue_drain_bounded():
     assert len(items) == 3 and q.qsize() == 2
 
 
+def test_experience_queue_counts_overflow_drops():
+    """Backpressure is measurable: a put that times out on a full queue
+    drops the experience and bumps drop_count instead of failing
+    silently."""
+    q = ExperienceQueue(maxsize=1)
+    assert q.put(Experience({}, 0, 0, 0.0), timeout=0.01)
+    assert not q.put(Experience({}, 1, 0, 0.0), timeout=0.01)
+    assert not q.put(Experience({}, 2, 0, 0.0), timeout=0.01)
+    assert q.drop_count == 2 and q.put_count == 1
+    # draining frees capacity; puts succeed again and drops stop growing
+    q.get(learner_version=0)
+    assert q.put(Experience({}, 3, 0, 0.0), timeout=0.01)
+    assert q.drop_count == 2 and q.put_count == 2
+
+
 # ---------------------------------------------------------------- replay
 @settings(max_examples=15, deadline=None)
 @given(cap=st.integers(4, 32), n1=st.integers(1, 40), n2=st.integers(1, 40))
@@ -81,3 +96,24 @@ def test_replay_sample_within_filled():
     out = sample(state, jax.random.PRNGKey(0), 64)
     assert out["x"].shape == (64,)
     assert set(np.asarray(out["x"]).tolist()) <= set(range(1, 7))
+
+
+@settings(max_examples=15, deadline=None)
+@given(cap=st.integers(4, 48), T=st.integers(1, 6), B=st.integers(1, 4),
+       iters=st.integers(1, 5))
+def test_uniform_buffer_ring_wraparound_property(cap, T, B, iters):
+    """Plane-level form of the ring property: UniformBuffer absorbing
+    whole trajectories keeps size == min(cap, total) and head in range."""
+    from repro.data.buffers import UniformBuffer
+    buf = UniformBuffer(capacity=cap, batch_size=4)
+    example = {"obs": jnp.zeros((1, 2)), "actions": jnp.zeros((1, 1)),
+               "rewards": jnp.zeros((1,)), "next_obs": jnp.zeros((1, 2)),
+               "dones": jnp.zeros((1,), bool)}
+    state = buf.init(example)
+    traj = {"obs": jnp.ones((T, B, 2)), "actions": jnp.ones((T, B, 1)),
+            "rewards": jnp.ones((T, B)), "dones": jnp.zeros((T, B), bool),
+            "next_obs": jnp.ones((T, B, 2))}
+    for _ in range(iters):
+        state = buf.add(state, traj)
+    assert int(state.size) == min(cap, iters * T * B)
+    assert 0 <= int(state.index) < cap

@@ -18,9 +18,12 @@ from repro.optim import adam
 TINY = dict(num_samplers=2, global_batch=4, horizon=8, iterations=2, seed=0)
 
 
-def _tiny_spec(algo, backend="inline", runtime="sync", **sched):
+def _tiny_spec(algo, backend="inline", runtime="sync", buffer=None,
+               buffer_kwargs=None, algo_kwargs=None, **sched):
     return ExperimentSpec(env="pendulum", algo=algo, backend=backend,
                           runtime=runtime, model={"hidden": 16},
+                          buffer=buffer, buffer_kwargs=buffer_kwargs or {},
+                          algo_kwargs=algo_kwargs or {},
                           schedule=Schedule(**{**TINY, **sched}))
 
 
@@ -33,6 +36,8 @@ def _assert_trees_equal(a, b):
 def test_spec_roundtrip():
     spec = ExperimentSpec(env="cheetah", algo="trpo", backend="threaded",
                           runtime="async", model={"hidden": 32},
+                          buffer="prioritized",
+                          buffer_kwargs={"capacity": 1024, "n_step": 3},
                           env_kwargs={"reward_scale": 0.5},
                           algo_kwargs={"max_kl": 0.02},
                           schedule=Schedule(num_samplers=3, seed=7))
@@ -54,7 +59,21 @@ def test_unknown_runtime_rejected():
 
 def test_unknown_algo_rejected_with_choices():
     with pytest.raises(KeyError, match="ppo"):
-        experiment.build(_tiny_spec("sac"))
+        experiment.build(_tiny_spec("dreamer"))
+
+
+def test_unknown_buffer_rejected_with_choices():
+    with pytest.raises(KeyError, match="fifo"):
+        experiment.build(_tiny_spec("ppo", buffer="bogus"))
+
+
+def test_algo_buffer_mismatch_rejected():
+    # on-policy learners eat whole trajectories, not replay minibatches
+    with pytest.raises(ValueError, match="on-policy"):
+        experiment.build(_tiny_spec("ppo", buffer="uniform"))
+    # and off-policy learners need transition minibatches
+    with pytest.raises(ValueError, match="off-policy"):
+        experiment.build(_tiny_spec("ddpg", buffer="fifo"))
 
 
 def test_unknown_backend_rejected_even_for_fused_runtime():
@@ -78,7 +97,7 @@ def test_runtime_backend_conflicts_rejected():
 
 
 # ================================================= algo x backend parity
-@pytest.mark.parametrize("algo", ["ppo", "trpo", "ddpg"])
+@pytest.mark.parametrize("algo", ["ppo", "trpo", "ddpg", "sac"])
 def test_algo_backend_parity_grid(algo):
     """Every algorithm runs on every backend, and because the backends are
     just schedules of the same sampler work, final params agree across
@@ -97,7 +116,7 @@ def test_algo_backend_parity_grid(algo):
     _assert_trees_equal(results["inline"], results["sharded"])
 
 
-@pytest.mark.parametrize("algo", ["ppo", "trpo", "ddpg"])
+@pytest.mark.parametrize("algo", ["ppo", "trpo", "ddpg", "sac"])
 def test_fused_runtime_runs_every_algo(algo):
     res = experiment.run(_tiny_spec(algo, runtime="fused", chunk=2))
     assert len(res.logs) == 2
@@ -105,11 +124,71 @@ def test_fused_runtime_runs_every_algo(algo):
                for x in jax.tree.leaves(res.params))
 
 
+# ======================================== the experience-plane grid
+OFFPOLICY_TINY = dict(buffer_kwargs={"capacity": 512, "batch_size": 16},
+                      algo_kwargs={"updates_per_collect": 2})
+
+
+@pytest.mark.parametrize("mode", ["inline", "threaded", "sharded", "fused",
+                                  "async"])
+@pytest.mark.parametrize("buffer", ["uniform", "prioritized"])
+@pytest.mark.parametrize("algo", ["ddpg", "sac"])
+def test_offpolicy_buffer_grid(algo, buffer, mode):
+    """{ddpg,sac} x {uniform,prioritized} x every runtime runs green —
+    the experience plane rides every scheduling of the same sampler
+    work, including the free-running async learner."""
+    runtime = ("fused" if mode == "fused"
+               else "async" if mode == "async" else "sync")
+    backend = ("inline" if mode == "fused"
+               else "threaded" if mode == "async" else mode)
+    spec = _tiny_spec(algo, backend=backend, runtime=runtime,
+                      buffer=buffer, chunk=2 if mode == "fused" else None,
+                      **OFFPOLICY_TINY)
+    res = experiment.run(spec)
+    assert len(res.logs) == 2
+    for log in res.logs:
+        assert np.isfinite(log.mean_return)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(res.params))
+    # the plane is runner-owned and filled; sync/fused insert exactly
+    # 2 iterations of T x B transitions (n_step=1), async at least that
+    ring = (res.runner.buffer_state.ring if buffer == "prioritized"
+            else res.runner.buffer_state)
+    expected = 2 * TINY["global_batch"] * TINY["horizon"]
+    if mode == "async":
+        # free-running samplers: the learner consumed >= 2 drains of
+        # min_batches trajectories (per-sampler batch x horizon each)
+        assert int(ring.size) >= 2 * (TINY["global_batch"] // 2) \
+            * TINY["horizon"]
+    else:
+        assert int(ring.size) == expected
+
+
+@pytest.mark.parametrize("algo", ["ddpg", "sac"])
+def test_offpolicy_opt_state_is_only_optimizer_state(algo):
+    """The acceptance criterion of the plane refactor: replay storage no
+    longer hides inside ``opt_state`` — every opt_state leaf is
+    parameter-shaped (Adam moments/counters), and the ring lives in the
+    runner-owned buffer state."""
+    from repro.data.replay import ReplayState
+    res = experiment.run(_tiny_spec(algo, **OFFPOLICY_TINY))
+
+    def contains_replay(tree):
+        found = []
+        jax.tree.map(lambda x: found.append(isinstance(x, ReplayState)),
+                     tree, is_leaf=lambda x: isinstance(x, ReplayState))
+        return any(found)
+
+    assert not contains_replay(res.runner.opt_state)
+    assert isinstance(res.runner.buffer_state, ReplayState)
+    assert int(res.runner.buffer_state.size) > 0
+
+
 def test_ddpg_replay_fills():
-    res = experiment.run(_tiny_spec("ddpg"))
-    replay = res.runner.opt_state[2]
+    res = experiment.run(_tiny_spec("ddpg", **OFFPOLICY_TINY))
+    ring = res.runner.buffer_state
     # 2 iterations x global_batch x horizon transitions inserted
-    assert int(replay.size) == 2 * TINY["global_batch"] * TINY["horizon"]
+    assert int(ring.size) == 2 * TINY["global_batch"] * TINY["horizon"]
 
 
 # ====================================== bitwise vs pre-refactor wiring

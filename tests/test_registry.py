@@ -41,10 +41,10 @@ def test_unknown_name_lists_choices():
 
 def test_unknown_algo_lists_choices():
     with pytest.raises(KeyError) as e:
-        registry.make("algo", "sac")
+        registry.make("algo", "dreamer")
     msg = str(e.value)
-    assert "unknown algo 'sac'" in msg
-    for name in ("ppo", "trpo", "ddpg"):
+    assert "unknown algo 'dreamer'" in msg
+    for name in ("ppo", "trpo", "ddpg", "sac"):
         assert name in msg
 
 
@@ -56,9 +56,11 @@ def test_unknown_kind_lists_kinds():
 
 
 def test_choices_cover_builtins():
-    assert set(registry.choices("algo")) >= {"ppo", "trpo", "ddpg"}
+    assert set(registry.choices("algo")) >= {"ppo", "trpo", "ddpg", "sac"}
     assert set(registry.choices("backend")) >= {"inline", "threaded",
                                                 "sharded"}
+    assert set(registry.choices("buffer")) == {"fifo", "uniform",
+                                               "prioritized"}
     assert "walle-mlp" in registry.choices("arch")
 
 
