@@ -20,11 +20,33 @@ from repro import experiment
 from repro.experiment import ExperimentSpec, Schedule
 
 ROWS: List[str] = []
+# structured mirror of ROWS — what benchmarks/run.py serializes into
+# BENCH_<rev>.json so the perf trajectory is recorded across PRs
+RECORDS: List[dict] = []
+
+
+def _parse_metrics(derived: str) -> dict:
+    """Pull ``key=value`` numeric pairs out of a derived string
+    (``adds_per_sec=123`` -> {"adds_per_sec": 123.0}); non-numeric or
+    free-form text is kept only in the raw ``derived`` field."""
+    metrics = {}
+    for part in derived.split():
+        if "=" not in part:
+            continue
+        k, _, v = part.partition("=")
+        try:
+            metrics[k] = float(v.rstrip(","))
+        except ValueError:
+            pass
+    return metrics
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived,
+                    "metrics": _parse_metrics(derived)})
     print(row)
 
 

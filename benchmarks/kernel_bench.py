@@ -1,12 +1,24 @@
-"""Microbenchmarks of the sampler's compute hot-spots (CPU reference
-implementations — the Pallas kernels are TPU-target and interpret mode is a
-correctness harness, not a timing one)."""
+"""Microbenchmarks of the compute hot-spots.
+
+Two sections:
+* LM sampler hot-spots (attention / selective-scan / decode) — CPU
+  reference implementations; the Pallas kernels are TPU-target and
+  interpret mode is a correctness harness, not a timing one.
+* RL hot-loop kernel plane (gae / sum_tree / replay_ring) — every family
+  timed ref *and* pallas so the kernel plane's speedup is measured, not
+  asserted. Off-TPU the pallas rows time the interpreter (expect them to
+  lose badly on CPU — the comparison is only meaningful on TPU); the
+  ref rows are the production CPU numbers.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
+from repro.kernels import gae as gae_k
+from repro.kernels import replay_ring as ring_k
+from repro.kernels import sum_tree as tree_k
 from repro.models import attention as A
 from repro.models.ssm import selective_scan as model_scan
 
@@ -61,7 +73,81 @@ def decode_bench():
         emit(f"decode_step_{arch}-reduced", t * 1e6, "B=4")
 
 
-def run_all():
+# ------------------------------------------------ RL hot-loop kernel plane
+IMPLS = ("ref", "pallas")
+
+
+def gae_rl_bench():
+    key = jax.random.PRNGKey(3)
+    T, B = 128, 32
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (T, B))
+    v = jax.random.normal(ks[1], (T, B))
+    d = jax.random.bernoulli(ks[2], 0.05, (T, B))
+    lv = jax.random.normal(ks[3], (B,))
+    for impl in IMPLS:
+        f = jax.jit(lambda r, v, d, lv, impl=impl:
+                    gae_k.gae(r, v, d, lv, impl=impl))
+        dt = timed(f, r, v, d, lv)
+        emit(f"gae_{impl}_T{T}_B{B}", dt * 1e6,
+             f"steps_per_sec={T * B / dt:.0f}")
+        fr = jax.jit(lambda r, d, lv, impl=impl:
+                     gae_k.discounted_returns(r, d, lv, impl=impl))
+        dtr = timed(fr, r, d, lv)
+        emit(f"gae_returns_{impl}_T{T}_B{B}", dtr * 1e6,
+             f"steps_per_sec={T * B / dtr:.0f}")
+
+
+def sum_tree_bench():
+    cap, B = 4096, 256
+    leaves = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (cap,)))
+    tree = tree_k.sumtree_build(leaves)
+    masses = (jnp.arange(B, dtype=jnp.float32) + 0.5) / B * tree.total
+    idx = jax.random.randint(jax.random.PRNGKey(5), (B,), 0, cap)
+    vals = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (B,)))
+    for impl in IMPLS:
+        f = jax.jit(lambda t, m, impl=impl:
+                    tree_k.sumtree_find_batch(t, m, impl=impl))
+        dt = timed(f, tree, masses)
+        emit(f"sum_tree_find_{impl}_cap{cap}_B{B}", dt * 1e6,
+             f"samples_per_sec={B / dt:.0f}")
+        fu = jax.jit(lambda t, i, v, impl=impl:
+                     tree_k.sumtree_update(t, i, v, impl=impl))
+        dtu = timed(fu, tree, idx, vals)
+        emit(f"sum_tree_update_{impl}_cap{cap}_B{B}", dtu * 1e6,
+             f"writes_per_sec={B / dtu:.0f}")
+
+
+def replay_ring_bench():
+    cap, n, B, D = 4096, 256, 256, 16
+    storage = {"obs": jnp.zeros((cap, D)), "rewards": jnp.zeros((cap,))}
+    batch = {"obs": jnp.ones((n, D)), "rewards": jnp.ones((n,))}
+    idx = jax.random.randint(jax.random.PRNGKey(7), (B,), 0, cap)
+    for impl in IMPLS:
+        f = jax.jit(lambda s, b, i, impl=impl:
+                    ring_k.ring_insert(s, b, i, impl=impl))
+        dt = timed(f, storage, batch, jnp.int32(100))
+        emit(f"replay_ring_insert_{impl}_cap{cap}_n{n}", dt * 1e6,
+             f"adds_per_sec={n / dt:.0f}")
+        g = jax.jit(lambda s, i, impl=impl:
+                    ring_k.ring_gather(s, i, impl=impl))
+        dtg = timed(g, storage, idx)
+        emit(f"replay_ring_gather_{impl}_cap{cap}_B{B}", dtg * 1e6,
+             f"samples_per_sec={B / dtg:.0f}")
+
+
+def run_lm():
     attention_bench()
     scan_bench()
     decode_bench()
+
+
+def run_rl():
+    gae_rl_bench()
+    sum_tree_bench()
+    replay_ring_bench()
+
+
+def run_all():
+    run_lm()
+    run_rl()

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
 from repro import registry
+from repro.kernels import select as kernel_select
 
 T, B = 64, 16                     # one collected trajectory batch
 CAPACITY = 16_384
@@ -45,34 +46,46 @@ def _example():
     }
 
 
-def bench_buffer(kind: str, n_step: int = 1) -> None:
+def bench_buffer(kind: str, n_step: int = 1, kernels: str = "auto",
+                 iters: int = 20) -> None:
     kwargs = ({} if kind == "fifo"
               else {"capacity": CAPACITY, "batch_size": BATCH_SIZE,
                     "n_step": n_step})
-    buf = registry.make("buffer", kind, **kwargs)
-    traj = _traj()
-    example = traj if kind == "fifo" else _example()
-    state = buf.init(example)
-    add = jax.jit(buf.add)
-    sample = jax.jit(buf.sample)
-    key = jax.random.PRNGKey(0)
+    prev = kernel_select.set_kernel_mode(kernels)
+    try:
+        buf = registry.make("buffer", kind, **kwargs)
+        traj = _traj()
+        example = traj if kind == "fifo" else _example()
+        state = buf.init(example)
+        add = jax.jit(buf.add)
+        sample = jax.jit(buf.sample)
+        key = jax.random.PRNGKey(0)
 
-    state = add(state, traj)      # fill once so sampling is valid
-    tag = f"replay_{kind}" + (f"_n{n_step}" if n_step != 1 else "")
-    dt_add = timed(add, state, traj, warmup=2, iters=20)
-    adds_per_sec = (T - n_step + 1) * B / dt_add
-    emit(f"{tag}_add", dt_add * 1e6, f"adds_per_sec={adds_per_sec:.0f}")
+        state = add(state, traj)      # fill once so sampling is valid
+        tag = (f"replay_{kind}" + (f"_n{n_step}" if n_step != 1 else "")
+               + (f"_{kernels}" if kernels != "auto" else ""))
+        dt_add = timed(add, state, traj, warmup=2, iters=iters)
+        adds_per_sec = (T - n_step + 1) * B / dt_add
+        emit(f"{tag}_add", dt_add * 1e6, f"adds_per_sec={adds_per_sec:.0f}")
 
-    dt_sample = timed(sample, state, key, warmup=2, iters=20)
-    drawn = T * B if kind == "fifo" else BATCH_SIZE
-    emit(f"{tag}_sample", dt_sample * 1e6,
-         f"samples_per_sec={drawn / dt_sample:.0f}")
+        dt_sample = timed(sample, state, key, warmup=2, iters=iters)
+        drawn = T * B if kind == "fifo" else BATCH_SIZE
+        emit(f"{tag}_sample", dt_sample * 1e6,
+             f"samples_per_sec={drawn / dt_sample:.0f}")
+    finally:
+        kernel_select.set_kernel_mode(prev)
 
 
 def run_all() -> None:
     for kind in ("fifo", "uniform", "prioritized"):
         bench_buffer(kind)
     bench_buffer("uniform", n_step=3)
+    # the same jitted buffer ops with each kernel-plane implementation
+    # pinned (off-TPU the pallas rows time the interpreter — a
+    # correctness harness, not production numbers; see kernel_bench's RL
+    # section for the per-kernel breakdown)
+    for kernels in ("ref", "pallas"):
+        bench_buffer("prioritized", kernels=kernels, iters=5)
 
 
 if __name__ == "__main__":

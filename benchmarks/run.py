@@ -1,32 +1,116 @@
-"""Benchmark driver — one section per paper table/figure.
+"""Benchmark driver — one section per paper table/figure, with a
+machine-readable record of every run.
 
-Prints ``name,us_per_call,derived`` CSV rows:
-  fig3_*  return curves N=10 vs N=1            (paper Fig 3)
-  fig4_*  rollout time vs N                    (paper Fig 4)
-  fig5_*  collection speedup vs N              (paper Fig 5)
-  fig6_*  learning-time fraction vs N          (paper Fig 6)
-  fig7_*  learning time per iteration vs N     (paper Fig 7)
-  fused_vs_stepped_*  fused-engine dispatch-overhead savings
-  replay_*  experience-plane adds/sec + samples/sec per buffer kind
-  attn_* / selective_scan_* / decode_step_*    sampler hot-spot microbenches
-  roofline_*  three-term roofline per (arch x shape x mesh)  [§Roofline]
+Prints ``name,us_per_call,derived`` CSV rows and, at the end, writes
+``BENCH_<rev>.json`` (per-benchmark throughput + config + timestamp)
+into ``--out-dir`` so the perf trajectory is recorded across PRs instead
+of evaporating into stdout. Sections:
+
+  fig         fig3..fig7 return/rollout/speedup curves   (paper Figs 3-7)
+  fused       fused-engine dispatch-overhead savings
+  replay      experience-plane adds/sec + samples/sec per buffer kind
+              (including kernel-plane ref/pallas rows for prioritized)
+  kernels_lm  attn_* / selective_scan_* / decode_step_* sampler benches
+  kernels_rl  gae / sum_tree / replay_ring ref-vs-pallas  [DESIGN.md §5]
+  roofline    three-term roofline per (arch x shape x mesh)
 
 The roofline section reads results/dryrun/*.json produced by
 ``python -m repro.launch.dryrun --all --both-meshes`` (run it first; rows
 are skipped gracefully if absent).
+
+  python -m benchmarks.run                          # everything
+  python -m benchmarks.run --sections kernels_rl    # one section, fast
 """
 from __future__ import annotations
 
+import argparse
+import datetime
+import json
+import os
+import platform
+import subprocess
+import time
 
-def main() -> None:
-    print("name,us_per_call,derived")
+
+def _sections():
     from benchmarks import fig_parallel, fused_vs_stepped, kernel_bench, \
         replay_bench, roofline
-    fig_parallel.run_all()
-    fused_vs_stepped.run_all()
-    replay_bench.run_all()
-    kernel_bench.run_all()
-    roofline.main()
+    return {
+        "fig": fig_parallel.run_all,
+        "fused": fused_vs_stepped.run_all,
+        "replay": replay_bench.run_all,
+        "kernels_lm": kernel_bench.run_lm,
+        "kernels_rl": kernel_bench.run_rl,
+        "roofline": roofline.main,
+    }
+
+
+def _git_rev() -> str:
+    """Short HEAD rev, ``-dirty``-suffixed when the tree has uncommitted
+    changes — numbers from unfinished work must not be attributed to the
+    last commit in the recorded trajectory."""
+    cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        rev = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            stderr=subprocess.DEVNULL).decode().strip()
+        dirty = subprocess.call(
+            ["git", "diff-index", "--quiet", "HEAD"], cwd=cwd,
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL) != 0
+        untracked = subprocess.check_output(
+            ["git", "ls-files", "--others", "--exclude-standard"],
+            cwd=cwd, stderr=subprocess.DEVNULL).strip()
+        return rev + ("-dirty" if dirty or untracked else "")
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def write_report(out_dir: str, sections) -> str:
+    """Serialize every emitted row (benchmarks.common.RECORDS) plus the
+    run's config into ``<out_dir>/BENCH_<rev>.json``; returns the path."""
+    import jax
+
+    from benchmarks import common
+    payload = {
+        "rev": _git_rev(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "unix_time": time.time(),
+        "config": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "sections": list(sections),
+        },
+        "benchmarks": common.RECORDS,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{payload['rev']}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def main(argv=None) -> None:
+    table = _sections()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", default=",".join(table),
+                    help="comma-separated subset of: " + ", ".join(table))
+    ap.add_argument("--out-dir", default="results",
+                    help="where BENCH_<rev>.json lands (default: results)")
+    args = ap.parse_args(argv)
+    names = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = [s for s in names if s not in table]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; choose from {list(table)}")
+
+    print("name,us_per_call,derived")
+    for name in names:
+        table[name]()
+    path = write_report(args.out_dir, names)
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

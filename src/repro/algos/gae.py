@@ -1,34 +1,32 @@
-"""Generalised Advantage Estimation (reverse-scan, jittable)."""
+"""Generalised Advantage Estimation — the learner-facing entry point.
+
+The recurrence itself lives in the kernel plane
+(``repro.kernels.gae``): a pure-JAX reverse-scan reference plus a
+chunked Pallas kernel, selected per experiment through
+``kernels.select`` (``ExperimentSpec.kernels`` / ``--kernels``). With
+the ref selection — the CPU default — this module is bitwise-identical
+to the historical sequential ``lax.scan`` implementation.
+"""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels.gae import discounted_returns, gae as _gae_op  # noqa: F401
 
 
 def gae(rewards: jnp.ndarray, values: jnp.ndarray, dones: jnp.ndarray,
-        last_value: jnp.ndarray, gamma: float = 0.99, lam: float = 0.95
-        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        last_value: jnp.ndarray, gamma: float = 0.99, lam: float = 0.95,
+        *, impl: Optional[str] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Compute advantages + returns.
 
     rewards/values/dones: (T, ...) time-major; last_value: (...) bootstrap.
     ``dones[t]`` marks that the episode ended *at* step t (no bootstrap
     across the boundary). Returns (advantages, returns), both (T, ...).
     """
-    nonterm = 1.0 - dones.astype(jnp.float32)
-
-    def step(carry, xs):
-        adv_next, v_next = carry
-        r, v, nt = xs
-        delta = r + gamma * v_next * nt - v
-        adv = delta + gamma * lam * nt * adv_next
-        return (adv, v), adv
-
-    init = (jnp.zeros_like(last_value), last_value)
-    _, advs = jax.lax.scan(step, init, (rewards, values, nonterm),
-                           reverse=True)
-    return advs, advs + values
+    return _gae_op(rewards, values, dones, last_value, gamma, lam,
+                   impl=impl)
 
 
 def normalize(adv: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:

@@ -35,13 +35,21 @@ with ``size == 0``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Protocol, Tuple, runtime_checkable
+from typing import Any, Dict, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 from repro import registry
 from repro.data import replay
+from repro.kernels.replay_ring import ring_gather
+from repro.kernels.sum_tree import (  # noqa: F401  (re-exported API)
+    SumTree,
+    sumtree_build,
+    sumtree_find,
+    sumtree_find_batch,
+    sumtree_update,
+)
 
 
 @runtime_checkable
@@ -179,7 +187,7 @@ class UniformBuffer:
     def sample(self, state: replay.ReplayState, key
                ) -> Dict[str, jnp.ndarray]:
         idx = replay.sample_indices(state, key, self.batch_size)
-        batch = {k: v[idx] for k, v in state.storage.items()}
+        batch = ring_gather(state.storage, idx)
         batch["indices"] = idx
         batch["weights"] = jnp.ones((self.batch_size,), jnp.float32)
         return batch
@@ -189,61 +197,10 @@ class UniformBuffer:
 
 
 # ============================================================== prioritized
-class SumTree(NamedTuple):
-    """A binary sum-tree as a tuple of per-level arrays.
-
-    ``levels[0]`` are the leaf masses (one per replay slot, capacity a
-    power of two); ``levels[k]`` holds pairwise sums of ``levels[k-1]``;
-    ``levels[-1]`` is the total mass ``(1,)``. A static tuple of arrays is
-    a plain pytree, so the whole tree lives in jit carries and donated
-    scan state like any other buffer array.
-    """
-
-    levels: Tuple[jnp.ndarray, ...]
-
-    @property
-    def total(self) -> jnp.ndarray:
-        return self.levels[-1][0]
-
-
-def sumtree_build(leaves: jnp.ndarray) -> SumTree:
-    levels = [leaves]
-    while levels[-1].shape[0] > 1:
-        levels.append(levels[-1].reshape(-1, 2).sum(axis=-1))
-    return SumTree(tuple(levels))
-
-
-def sumtree_find(tree: SumTree, mass: jnp.ndarray) -> jnp.ndarray:
-    """Descend from the root: the leaf whose prefix-sum interval holds
-    ``mass``. O(log capacity) gathers; vmap over a batch of masses."""
-    idx = jnp.zeros((), jnp.int32)
-    for level in tree.levels[-2::-1]:
-        idx = idx * 2
-        left = level[idx]
-        go_right = mass >= left
-        mass = jnp.where(go_right, mass - left, mass)
-        idx = jnp.where(go_right, idx + 1, idx)
-    return idx
-
-
-def sumtree_update(tree: SumTree, idx: jnp.ndarray,
-                   leaf_values: jnp.ndarray) -> SumTree:
-    """Set leaf masses at ``idx`` and recompute only the touched
-    root-to-leaf paths — O(B log capacity) instead of an O(capacity)
-    rebuild. Duplicate indices are safe: parents are recomputed from the
-    post-scatter children, so every write of a parent stores the same
-    (consistent) sum regardless of which duplicate leaf write won."""
-    levels = list(tree.levels)
-    levels[0] = levels[0].at[idx].set(leaf_values)
-    child = idx
-    for k in range(len(levels) - 1):
-        parent = child // 2
-        sums = levels[k][2 * parent] + levels[k][2 * parent + 1]
-        levels[k + 1] = levels[k + 1].at[parent].set(sums)
-        child = parent
-    return SumTree(tuple(levels))
-
-
+# SumTree and its build/find/update live in the kernel plane
+# (``repro.kernels.sum_tree``): a pure-JAX reference plus fused Pallas
+# descent/update kernels behind one dispatcher. They are re-exported
+# above so this module remains the buffer-facing API.
 class PrioritizedState(NamedTuple):
     ring: replay.ReplayState     # storage + write index + filled size
     tree: SumTree                # leaf i = priority_i ** alpha
@@ -300,16 +257,18 @@ class PrioritizedBuffer:
         replay.ensure_nonempty(state.ring)
         B = self.batch_size
         total = state.tree.total
-        # stratified masses: one per equal slice of the total, so the draw
-        # covers the distribution even at small batch sizes
+        # one key, one stratified draw: a single (B,) uniform covers every
+        # equal slice of the total mass, and the whole batch descends the
+        # tree together (one vectorized gather per level — no per-sample
+        # vmap machinery, no extra PRNG traffic inside the jitted step)
         u = (jnp.arange(B, dtype=jnp.float32)
              + jax.random.uniform(key, (B,))) / B
-        idx = jax.vmap(lambda m: sumtree_find(state.tree, m))(u * total)
+        idx = sumtree_find_batch(state.tree, u * total)
         idx = jnp.minimum(idx, jnp.maximum(state.ring.size, 1) - 1)
         probs = state.tree.levels[0][idx] / jnp.maximum(total, self.eps)
         weights = (jnp.maximum(state.ring.size, 1).astype(jnp.float32)
                    * jnp.maximum(probs, self.eps)) ** (-self.beta)
-        batch = {k: v[idx] for k, v in state.ring.storage.items()}
+        batch = ring_gather(state.ring.storage, idx)
         batch["indices"] = idx
         batch["weights"] = weights / jnp.max(weights)
         return batch

@@ -1,10 +1,19 @@
-"""Uniform replay buffer (ring, preallocated, jittable) — DDPG substrate."""
+"""Uniform replay buffer (ring, preallocated, jittable) — DDPG substrate.
+
+The scatter-insert and minibatch-gather hot paths dispatch through the
+kernel plane (``repro.kernels.replay_ring``): with the ref selection —
+the CPU default — they are the historical XLA scatter/gather bit for
+bit; on TPU (``--kernels auto``/``pallas``) each becomes one fused
+Pallas launch per storage leaf.
+"""
 from __future__ import annotations
 
 from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.replay_ring import ring_gather, ring_insert
 
 
 class ReplayState(NamedTuple):
@@ -25,9 +34,7 @@ def add_batch(state: ReplayState, batch: Dict[str, jnp.ndarray]
     """Insert (N, ...) transitions at the ring head (wraps around)."""
     cap = next(iter(state.storage.values())).shape[0]
     n = next(iter(batch.values())).shape[0]
-    idx = (state.index + jnp.arange(n)) % cap
-    storage = {k: state.storage[k].at[idx].set(batch[k])
-               for k in state.storage}
+    storage = ring_insert(state.storage, batch, state.index)
     return ReplayState(storage, (state.index + n) % cap,
                        jnp.minimum(state.size + n, cap))
 
@@ -60,4 +67,4 @@ def sample(state: ReplayState, key, batch_size: int
            ) -> Dict[str, jnp.ndarray]:
     """Draw ``batch_size`` uniform transitions from the filled prefix."""
     idx = sample_indices(state, key, batch_size)
-    return {k: v[idx] for k, v in state.storage.items()}
+    return ring_gather(state.storage, idx)

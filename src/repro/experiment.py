@@ -35,6 +35,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 
+from repro import kernels as kernels_mod
 from repro import registry
 from repro.algos.api import make_train_step
 from repro.core import sampler as sampler_mod
@@ -71,6 +72,9 @@ class ExperimentSpec:
     runtime: str = "sync"                 # sync | async | fused
     buffer: Optional[str] = None          # fifo | uniform | prioritized
     #                                       (None: the algo's default)
+    kernels: str = "auto"                 # ref | pallas | auto — which
+    #                                       kernel-plane implementation the
+    #                                       hot-loop ops trace (DESIGN.md §5)
     model: Dict[str, Any] = dataclasses.field(default_factory=dict)
     schedule: Schedule = dataclasses.field(default_factory=Schedule)
     env_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -175,6 +179,16 @@ def build(spec: ExperimentSpec):
     algo = registry.make("algo", spec.algo,
                          **{**dict(spec.model), **dict(spec.algo_kwargs)})
     buffer = _resolve_buffer(spec, algo)
+    # kernel-plane selection is read at trace time: set it after all
+    # other validation (set_kernel_mode itself validates-then-mutates, so
+    # a rejected spec never leaves the mode changed) and before anything
+    # below is traced, so the whole runner sees one
+    # consistent implementation (the default, ``auto``, resolves to the
+    # bitwise-stable refs off-TPU). The mode is process-global — a runner
+    # built here but first *traced* after another build() is traced under
+    # that later spec's mode; drive runners before building the next spec
+    # (``run`` does) when their ``kernels`` differ.
+    kernels_mod.set_kernel_mode(spec.kernels)
     sched = spec.schedule
     params, opt_state = algo.init(jax.random.PRNGKey(sched.seed), env)
     rollout = algo.make_rollout(env, sched.horizon)

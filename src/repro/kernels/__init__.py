@@ -1,9 +1,39 @@
-# TPU Pallas kernels for the sampler's compute hot-spots (the experience-
-# collection half of WALL-E). Each subpackage: <name>.py (pallas_call +
-# BlockSpec VMEM tiling), ops.py (jit'd wrapper in model layout), ref.py
-# (pure-jnp oracle used by the allclose test sweeps).
+"""The kernel plane: TPU Pallas kernels for every hot path, each behind
+a ref/pallas dispatcher.
+
+Two workload groups share one layout (``<name>_pallas``-style kernel +
+``ops.py`` dispatcher + ``ref.py`` pure-jnp oracle per subpackage):
+
+* LM sampler hot-spots — ``flash_attention``, ``decode_attention``,
+  ``selective_scan`` (validated by allclose sweeps).
+* RL hot-loop families — ``gae``, ``sum_tree``, ``replay_ring``
+  (validated by *exact*-parity sweeps; the ref selection is the bitwise
+  baseline the rest of the suite is stated against).
+
+The RL families are registered under the registry kind ``"kernel"``
+(``registry.make("kernel", "gae")`` returns the family's ops namespace;
+``registry.choices("kernel")`` enumerates them — how the benchmarks and
+docs discover the plane). Which implementation a dispatcher traces is a
+process-global mode (``select.set_kernel_mode``; ``ref``/``pallas``/
+``auto``) spec'd per experiment via ``ExperimentSpec.kernels`` and
+``launch/train.py --kernels``. See DESIGN.md §5.
+"""
+from repro import registry
+from repro.kernels import select  # noqa: F401
 from repro.kernels import (  # noqa: F401
     decode_attention,
     flash_attention,
+    gae,
+    replay_ring,
     selective_scan,
+    sum_tree,
 )
+from repro.kernels.select import (  # noqa: F401
+    kernel_mode,
+    resolve,
+    set_kernel_mode,
+)
+
+registry.register("kernel", "gae", lambda: gae)
+registry.register("kernel", "sum_tree", lambda: sum_tree)
+registry.register("kernel", "replay_ring", lambda: replay_ring)

@@ -1,0 +1,9 @@
+from repro.kernels.gae.gae_pallas import (  # noqa: F401
+    discounted_returns_pallas,
+    gae_pallas,
+)
+from repro.kernels.gae.ops import discounted_returns, gae  # noqa: F401
+from repro.kernels.gae.ref import (  # noqa: F401
+    discounted_returns_ref,
+    gae_ref,
+)

@@ -1,0 +1,159 @@
+"""GAE / discounted-returns Pallas kernels for TPU.
+
+The RL learner's per-iteration recurrence, moved on-device in chunks:
+time-major ``(T, B)`` reward/value/done blocks are tiled ``b_block`` wide
+over batch and cut into ``t_chunk`` chunks along the sequential last grid
+axis, walked in *reverse* (chunk ``ci`` processes time block
+``nc - 1 - ci``). The scan carry — ``(adv_{t+1}, v_{t+1})`` for GAE,
+``R_{t+1}`` for returns — persists in VMEM scratch across chunks, the
+same HBM->VMEM->VREG shape as ``selective_scan``: one kernel launch
+replaces T host-scheduled scan steps.
+
+Each in-VMEM step evaluates *exactly* the reference expressions
+(``delta = r + gamma * v_next * nt - v`` etc.), so on every backend the
+kernel is bitwise-identical to ``ref.gae_ref`` — the parity tests assert
+equality, not closeness.
+
+Ragged shapes are handled by padding: T is padded up to a whole number
+of chunks (padded rows are skipped via ``pl.when`` so they never touch
+the carry) and B up to a whole number of lanes (padded columns computed
+then sliced away).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gae_kernel(r_ref, v_ref, nt_ref, lv_ref, adv_ref, ret_ref, carry_ref,
+                *, t_chunk: int, num_chunks: int, t_true: int,
+                gamma: float, lam: float):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[0] = jnp.zeros_like(lv_ref[0])     # adv_{t+1}
+        carry_ref[1] = lv_ref[0]                     # v_{t+1}
+
+    base = (num_chunks - 1 - ci) * t_chunk
+
+    def step(i, _):
+        t = t_chunk - 1 - i                          # reverse inside chunk
+
+        @pl.when(base + t < t_true)                  # skip T-padding rows
+        def _():
+            r, v, nt = r_ref[t], v_ref[t], nt_ref[t]
+            adv_next, v_next = carry_ref[0], carry_ref[1]
+            delta = r + gamma * v_next * nt - v
+            adv = delta + gamma * lam * nt * adv_next
+            adv_ref[t] = adv
+            ret_ref[t] = adv + v
+            carry_ref[0] = adv
+            carry_ref[1] = v
+        return 0
+
+    jax.lax.fori_loop(0, t_chunk, step, 0)
+
+
+def _returns_kernel(r_ref, nt_ref, lv_ref, ret_ref, carry_ref,
+                    *, t_chunk: int, num_chunks: int, t_true: int,
+                    gamma: float):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[0] = lv_ref[0]                     # R_{t+1}
+
+    base = (num_chunks - 1 - ci) * t_chunk
+
+    def step(i, _):
+        t = t_chunk - 1 - i
+
+        @pl.when(base + t < t_true)
+        def _():
+            ret = r_ref[t] + gamma * nt_ref[t] * carry_ref[0]
+            ret_ref[t] = ret
+            carry_ref[0] = ret
+        return 0
+
+    jax.lax.fori_loop(0, t_chunk, step, 0)
+
+
+def _pad_tb(x: jnp.ndarray, tp: int, bp: int) -> jnp.ndarray:
+    T, B = x.shape
+    return jnp.pad(x, ((0, tp - T), (0, bp - B)))
+
+
+def gae_pallas(rewards: jnp.ndarray, values: jnp.ndarray,
+               nonterm: jnp.ndarray, last_value: jnp.ndarray, *,
+               gamma: float, lam: float, b_block: int = 128,
+               t_chunk: int = 128, interpret: bool = True
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """rewards/values/nonterm (T, B) f32, last_value (B,) f32.
+
+    Returns (advantages, returns), both (T, B) f32.
+    """
+    T, B = rewards.shape
+    t_chunk = min(t_chunk, T)
+    b_block = min(b_block, B)
+    nc = pl.cdiv(T, t_chunk)
+    nb = pl.cdiv(B, b_block)
+    tp, bp = nc * t_chunk, nb * b_block
+
+    args = [_pad_tb(x.astype(jnp.float32), tp, bp)
+            for x in (rewards, values, nonterm)]
+    lv = jnp.pad(last_value.astype(jnp.float32), (0, bp - B))[None, :]
+
+    kernel = functools.partial(_gae_kernel, t_chunk=t_chunk, num_chunks=nc,
+                               t_true=T, gamma=gamma, lam=lam)
+    tb_spec = pl.BlockSpec((t_chunk, b_block),
+                           lambda bi, ci: (nc - 1 - ci, bi))
+    lv_spec = pl.BlockSpec((1, b_block), lambda bi, ci: (0, bi))
+    adv, ret = pl.pallas_call(
+        kernel,
+        grid=(nb, nc),
+        in_specs=[tb_spec, tb_spec, tb_spec, lv_spec],
+        out_specs=[tb_spec, tb_spec],
+        out_shape=[jax.ShapeDtypeStruct((tp, bp), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((2, b_block), jnp.float32)],
+        interpret=interpret,
+    )(*args, lv)
+    return adv[:T, :B], ret[:T, :B]
+
+
+def discounted_returns_pallas(rewards: jnp.ndarray, nonterm: jnp.ndarray,
+                              last_value: jnp.ndarray, *, gamma: float,
+                              b_block: int = 128, t_chunk: int = 128,
+                              interpret: bool = True) -> jnp.ndarray:
+    """rewards/nonterm (T, B) f32, last_value (B,) f32 -> returns (T, B)."""
+    T, B = rewards.shape
+    t_chunk = min(t_chunk, T)
+    b_block = min(b_block, B)
+    nc = pl.cdiv(T, t_chunk)
+    nb = pl.cdiv(B, b_block)
+    tp, bp = nc * t_chunk, nb * b_block
+
+    args = [_pad_tb(x.astype(jnp.float32), tp, bp)
+            for x in (rewards, nonterm)]
+    lv = jnp.pad(last_value.astype(jnp.float32), (0, bp - B))[None, :]
+
+    kernel = functools.partial(_returns_kernel, t_chunk=t_chunk,
+                               num_chunks=nc, t_true=T, gamma=gamma)
+    tb_spec = pl.BlockSpec((t_chunk, b_block),
+                           lambda bi, ci: (nc - 1 - ci, bi))
+    lv_spec = pl.BlockSpec((1, b_block), lambda bi, ci: (0, bi))
+    ret = pl.pallas_call(
+        kernel,
+        grid=(nb, nc),
+        in_specs=[tb_spec, tb_spec, lv_spec],
+        out_specs=tb_spec,
+        out_shape=jax.ShapeDtypeStruct((tp, bp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, b_block), jnp.float32)],
+        interpret=interpret,
+    )(*args, lv)
+    return ret[:T, :B]

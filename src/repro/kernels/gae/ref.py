@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the GAE family: sequential reverse scans.
+
+``gae_ref`` is the historical ``algos/gae.py`` recurrence moved here
+verbatim — same expressions in the same order — so selecting ``ref``
+(the CPU default) keeps every bitwise guarantee in the suite intact.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gae_ref(rewards: jnp.ndarray, values: jnp.ndarray, dones: jnp.ndarray,
+            last_value: jnp.ndarray, gamma: float = 0.99, lam: float = 0.95
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute advantages + returns.
+
+    rewards/values/dones: (T, ...) time-major; last_value: (...) bootstrap.
+    ``dones[t]`` marks that the episode ended *at* step t (no bootstrap
+    across the boundary). Returns (advantages, returns), both (T, ...).
+    """
+    nonterm = 1.0 - dones.astype(jnp.float32)
+
+    def step(carry, xs):
+        adv_next, v_next = carry
+        r, v, nt = xs
+        delta = r + gamma * v_next * nt - v
+        adv = delta + gamma * lam * nt * adv_next
+        return (adv, v), adv
+
+    init = (jnp.zeros_like(last_value), last_value)
+    _, advs = jax.lax.scan(step, init, (rewards, values, nonterm),
+                           reverse=True)
+    return advs, advs + values
+
+
+def discounted_returns_ref(rewards: jnp.ndarray, dones: jnp.ndarray,
+                           last_value: jnp.ndarray, gamma: float = 0.99
+                           ) -> jnp.ndarray:
+    """Discounted returns-to-go: R_t = r_t + gamma * nt_t * R_{t+1},
+    bootstrapped from ``last_value``. Shapes as ``gae_ref``."""
+    nonterm = 1.0 - dones.astype(jnp.float32)
+
+    def step(carry, xs):
+        r, nt = xs
+        ret = r + gamma * nt * carry
+        return ret, ret
+
+    _, rets = jax.lax.scan(step, last_value, (rewards, nonterm),
+                           reverse=True)
+    return rets

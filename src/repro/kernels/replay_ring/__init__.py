@@ -1,0 +1,12 @@
+from repro.kernels.replay_ring.ops import (  # noqa: F401
+    ring_gather,
+    ring_insert,
+)
+from repro.kernels.replay_ring.ref import (  # noqa: F401
+    ring_gather_ref,
+    ring_insert_ref,
+)
+from repro.kernels.replay_ring.replay_ring_pallas import (  # noqa: F401
+    ring_gather_pallas,
+    ring_insert_pallas,
+)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the replay-ring family.
+
+Exactly the scatter/gather the historical ``data/replay.py`` /
+``data/buffers.py`` paths performed — ``ring_insert_ref`` is the body of
+``replay.add_batch``, ``ring_gather_ref`` the ``{k: v[idx]}`` minibatch
+draw — so the ref selection (the CPU default) is bitwise-identical to
+the pre-kernel-plane behavior.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def ring_insert_ref(storage: Dict[str, jnp.ndarray],
+                    batch: Dict[str, jnp.ndarray],
+                    start: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write (N, ...) rows at the ring head (wraps around; duplicates
+    resolve last-write-wins, matching in-order scatter)."""
+    cap = next(iter(storage.values())).shape[0]
+    n = next(iter(batch.values())).shape[0]
+    idx = (start + jnp.arange(n)) % cap
+    return {k: storage[k].at[idx].set(batch[k]) for k in storage}
+
+
+def ring_gather_ref(storage: Dict[str, jnp.ndarray],
+                    idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Draw the rows at ``idx`` from every leaf."""
+    return {k: v[idx] for k, v in storage.items()}

@@ -1,0 +1,66 @@
+"""Kernel-plane implementation selection: ``ref`` | ``pallas`` | ``auto``.
+
+Every RL hot-loop kernel family (``gae``, ``sum_tree``, ``replay_ring``)
+ships a pure-JAX reference and a Pallas kernel behind one ``ops.py``
+dispatcher. Which implementation a dispatcher traces is decided here:
+
+* ``ref``    — always the pure-JAX oracle. The default resolution on
+  CPU, and the implementation every bitwise guarantee in the test suite
+  (``ppo`` × ``inline`` legacy identity, ``fused == stepped``) is stated
+  against.
+* ``pallas`` — always the Pallas kernel. Off-TPU the kernel runs in
+  interpret mode (a correctness harness, not a timing one), so parity
+  tests exercise the real kernel bodies on CPU CI.
+* ``auto``   — ``pallas`` compiled on TPU, ``ref`` everywhere else. The
+  default: experiments pick up the kernels exactly where they pay off
+  and stay on the oracle (and bitwise-stable) elsewhere.
+
+The mode is process-global and read at **trace time**: dispatchers
+branch when a train step is traced, so already-jitted callables keep the
+implementation they were traced with. Set it before building an
+experiment (``ExperimentSpec.kernels`` does this in ``experiment.build``,
+``launch/train.py`` exposes it as ``--kernels``), or override per call
+with the dispatchers' ``impl=`` argument (how the parity tests and
+benchmarks pin both sides).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+MODES = ("ref", "pallas", "auto")
+
+_mode = "auto"
+
+
+def set_kernel_mode(mode: str) -> str:
+    """Set the process-global selection mode; returns the previous one."""
+    global _mode
+    if mode not in MODES:
+        raise ValueError(f"unknown kernel mode {mode!r}; choose from {MODES}")
+    prev, _mode = _mode, mode
+    return prev
+
+
+def kernel_mode() -> str:
+    return _mode
+
+
+def resolve(impl: Optional[str] = None) -> Tuple[str, bool]:
+    """Resolve a per-call override (or the global mode) to a concrete
+    implementation: ``("ref", False)`` or ``("pallas", interpret)``.
+
+    ``interpret`` is True whenever the Pallas kernel would run off-TPU —
+    the interpreter executes the kernel body with real JAX ops, so the
+    result is exact but the timing is meaningless.
+    """
+    mode = impl if impl is not None else _mode
+    if mode not in MODES:
+        raise ValueError(f"unknown kernel impl {mode!r}; choose from {MODES}")
+    on_tpu = jax.default_backend() == "tpu"
+    if mode == "auto":
+        mode = "pallas" if on_tpu else "ref"
+    if mode == "ref":
+        return "ref", False
+    return "pallas", not on_tpu

@@ -1,0 +1,17 @@
+from repro.kernels.sum_tree.ops import (  # noqa: F401
+    sumtree_find_batch,
+    sumtree_update,
+    tree_flatten,
+    tree_unflatten,
+)
+from repro.kernels.sum_tree.ref import (  # noqa: F401
+    SumTree,
+    sumtree_build,
+    sumtree_find,
+    sumtree_find_batch_ref,
+    sumtree_update_ref,
+)
+from repro.kernels.sum_tree.sum_tree_pallas import (  # noqa: F401
+    sumtree_find_pallas,
+    sumtree_update_pallas,
+)

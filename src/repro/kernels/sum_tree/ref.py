@@ -1,0 +1,78 @@
+"""Pure-jnp sum-tree reference: the prioritized-replay substrate.
+
+The tree is a tuple of per-level arrays (``levels[0]`` = leaf masses,
+one per replay slot, capacity a power of two; ``levels[-1]`` = total) —
+a plain pytree, so it lives in jit carries and donated scan state like
+any other buffer array. These are the oracle implementations the Pallas
+kernels are held bitwise-equal to; ``repro.data.buffers`` re-exports
+them as its sum-tree API.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class SumTree(NamedTuple):
+    """A binary sum-tree as a tuple of per-level arrays.
+
+    ``levels[0]`` are the leaf masses (one per replay slot, capacity a
+    power of two); ``levels[k]`` holds pairwise sums of ``levels[k-1]``;
+    ``levels[-1]`` is the total mass ``(1,)``. A static tuple of arrays is
+    a plain pytree, so the whole tree lives in jit carries and donated
+    scan state like any other buffer array.
+    """
+
+    levels: Tuple[jnp.ndarray, ...]
+
+    @property
+    def total(self) -> jnp.ndarray:
+        return self.levels[-1][0]
+
+
+def sumtree_build(leaves: jnp.ndarray) -> SumTree:
+    levels = [leaves]
+    while levels[-1].shape[0] > 1:
+        levels.append(levels[-1].reshape(-1, 2).sum(axis=-1))
+    return SumTree(tuple(levels))
+
+
+def sumtree_find(tree: SumTree, mass: jnp.ndarray) -> jnp.ndarray:
+    """Descend from the root: the leaf whose prefix-sum interval holds
+    ``mass``. The scalar form of ``sumtree_find_batch_ref`` (the descent
+    is shape-polymorphic)."""
+    return sumtree_find_batch_ref(tree, mass)
+
+
+def sumtree_find_batch_ref(tree: SumTree, masses: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """Batched stratified descent: one vectorized gather per level for
+    the whole batch (elementwise identical to vmapping ``sumtree_find``,
+    without materializing a per-sample descent)."""
+    idx = jnp.zeros(masses.shape, jnp.int32)
+    for level in tree.levels[-2::-1]:
+        idx = idx * 2
+        left = level[idx]
+        go_right = masses >= left
+        masses = jnp.where(go_right, masses - left, masses)
+        idx = jnp.where(go_right, idx + 1, idx)
+    return idx
+
+
+def sumtree_update_ref(tree: SumTree, idx: jnp.ndarray,
+                       leaf_values: jnp.ndarray) -> SumTree:
+    """Set leaf masses at ``idx`` and recompute only the touched
+    root-to-leaf paths — O(B log capacity) instead of an O(capacity)
+    rebuild. Duplicate indices are safe: parents are recomputed from the
+    post-scatter children, so every write of a parent stores the same
+    (consistent) sum regardless of which duplicate leaf write won."""
+    levels = list(tree.levels)
+    levels[0] = levels[0].at[idx].set(leaf_values)
+    child = idx
+    for k in range(len(levels) - 1):
+        parent = child // 2
+        sums = levels[k][2 * parent] + levels[k][2 * parent + 1]
+        levels[k + 1] = levels[k + 1].at[parent].set(sums)
+        child = parent
+    return SumTree(tuple(levels))

@@ -1,0 +1,137 @@
+"""Fused sum-tree Pallas kernels for TPU.
+
+Prioritized replay's two hot paths, each as one kernel launch over a
+*flat* tree layout (all levels concatenated leaves-first — offsets are
+static, derived from the capacity):
+
+* ``sumtree_find_pallas``  — the full stratified root-to-leaf descent
+  for a batch of B masses. The tree lives in VMEM for the whole walk
+  (O(2·cap) floats — the only large buffer) and each sample walks
+  root-to-leaf with ``log2(cap)`` scalar reads, so the launch does
+  O(B·log cap) work instead of ``log2(cap)`` separately scheduled
+  host-side gathers.
+* ``sumtree_update_pallas`` — the batched priority write-back: a
+  sequential last-write-wins leaf scatter (matching XLA's in-order
+  ``.at[idx].set`` semantics under duplicates) followed by a pairwise
+  rebuild of every parent level while the leaves are still in VMEM.
+  Assumes the input tree is consistent (every parent the pairwise sum of
+  its children — guaranteed by construction), in which case the rebuild
+  is bitwise-identical to the reference's touched-path recomputation.
+
+Both kernels evaluate the reference expressions exactly, so parity tests
+assert equality, not closeness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def level_sizes(capacity: int) -> Tuple[int, ...]:
+    """Static per-level lengths of the flat layout, leaves first."""
+    if capacity & (capacity - 1):
+        raise ValueError(f"sum-tree capacity must be a power of two, "
+                         f"got {capacity}")
+    sizes = []
+    n = capacity
+    while n >= 1:
+        sizes.append(n)
+        if n == 1:
+            break
+        n //= 2
+    return tuple(sizes)
+
+
+def level_offsets(sizes: Sequence[int]) -> Tuple[int, ...]:
+    offs, off = [], 0
+    for s in sizes:
+        offs.append(off)
+        off += s
+    return tuple(offs)
+
+
+def _find_kernel(flat_ref, m_ref, idx_ref, *, sizes, offsets, batch: int):
+    num_levels = len(sizes)
+
+    def walk(j, _):
+        idx = jnp.zeros((), jnp.int32)
+        mass = m_ref[0, j]
+        for k in range(num_levels - 2, -1, -1):
+            idx = idx * 2
+            left = flat_ref[0, offsets[k] + idx]
+            go_right = mass >= left
+            mass = jnp.where(go_right, mass - left, mass)
+            idx = jnp.where(go_right, idx + 1, idx)
+        idx_ref[0, j] = idx
+        return 0
+
+    jax.lax.fori_loop(0, batch, walk, 0)
+
+
+def _update_kernel(flat_ref, idx_ref, vals_ref, out_ref, *, sizes, offsets,
+                   batch: int):
+    cap = sizes[0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
+    leaves = flat_ref[:, 0:cap]
+
+    def write(j, leaves):
+        return jnp.where(pos == idx_ref[0, j], vals_ref[0, j], leaves)
+
+    leaves = jax.lax.fori_loop(0, batch, write, leaves)
+    out_ref[:, 0:cap] = leaves
+    child = leaves
+    for k in range(1, len(sizes)):
+        child = child[:, 0::2] + child[:, 1::2]
+        out_ref[:, offsets[k]:offsets[k] + sizes[k]] = child
+
+
+def sumtree_find_pallas(flat: jnp.ndarray, masses: jnp.ndarray, *,
+                        capacity: int, interpret: bool = True
+                        ) -> jnp.ndarray:
+    """flat (2*cap-1,) f32 (leaves-first levels), masses (B,) f32
+    -> leaf indices (B,) int32."""
+    sizes = level_sizes(capacity)
+    offsets = level_offsets(sizes)
+    (total,) = flat.shape
+    B = masses.shape[0]
+    kernel = functools.partial(_find_kernel, sizes=sizes, offsets=offsets,
+                               batch=B)
+    idx = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, total), lambda i: (0, 0)),
+                  pl.BlockSpec((1, B), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, B), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, B), jnp.int32),
+        interpret=interpret,
+    )(flat[None, :], masses[None, :])
+    return idx[0]
+
+
+def sumtree_update_pallas(flat: jnp.ndarray, idx: jnp.ndarray,
+                          leaf_values: jnp.ndarray, *, capacity: int,
+                          interpret: bool = True) -> jnp.ndarray:
+    """flat (2*cap-1,) f32, idx (B,) int32, leaf_values (B,) f32
+    -> updated flat tree."""
+    sizes = level_sizes(capacity)
+    offsets = level_offsets(sizes)
+    (total,) = flat.shape
+    B = idx.shape[0]
+    kernel = functools.partial(_update_kernel, sizes=sizes,
+                               offsets=offsets, batch=B)
+    out = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, total), lambda i: (0, 0)),
+                  pl.BlockSpec((1, B), lambda i: (0, 0)),
+                  pl.BlockSpec((1, B), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, total), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, total), jnp.float32),
+        interpret=interpret,
+    )(flat[None, :], idx[None, :].astype(jnp.int32),
+      leaf_values[None, :].astype(jnp.float32))
+    return out[0]

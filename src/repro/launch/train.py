@@ -19,7 +19,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --mode rl --env pendulum \
       --algo {ppo,trpo,ddpg,sac} --num-samplers 4 --iterations 20 \
       --backend {inline,threaded,sharded,fused} \
-      [--buffer prioritized --replay-capacity 100000 --n-step 3]
+      [--buffer prioritized --replay-capacity 100000 --n-step 3] \
+      [--kernels {ref,pallas,auto}]   # kernel plane (DESIGN.md §5)
   PYTHONPATH=src python -m repro.launch.train --mode lm \
       --arch mixtral-8x7b-reduced --steps 5
 """
@@ -70,6 +71,7 @@ def spec_from_args(args) -> ExperimentSpec:
         backend=backend,
         runtime=runtime,
         buffer=args.buffer,
+        kernels=args.kernels,
         model={"hidden": args.hidden},
         algo_kwargs=algo_kwargs,
         buffer_kwargs=buffer_kwargs,
@@ -153,6 +155,14 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="inline",
                     choices=registry.choices("backend") + ("fused",))
+    from repro.kernels.select import MODES as KERNEL_MODES
+    ap.add_argument("--kernels", default="auto",
+                    choices=KERNEL_MODES,
+                    help="kernel-plane implementation for the RL hot "
+                         "loop (gae/sum_tree/replay_ring): 'ref' pure-"
+                         "JAX oracles (bitwise baseline), 'pallas' the "
+                         "fused kernels (interpret mode off-TPU), "
+                         "'auto' pallas on TPU else ref")
     ap.add_argument("--buffer", default=None,
                     choices=registry.choices("buffer"),
                     help="experience buffer kind (default: the "

@@ -37,6 +37,7 @@ _BUILTIN_MODULES = {
     "backend": "repro.core.backends",
     "buffer": "repro.data.buffers",
     "arch": "repro.configs",
+    "kernel": "repro.kernels",
 }
 
 _REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {}

@@ -14,6 +14,7 @@ _HYPOTHESIS_MODULES = [
     "test_attention.py",
     "test_core_queues.py",
     "test_envs_data.py",
+    "test_kernel_plane_prop.py",
     "test_optim_ckpt.py",
     "test_wrappers.py",
 ]

@@ -1,0 +1,101 @@
+"""Property-based kernel-plane parity (hypothesis; skipped by conftest
+when hypothesis is absent).
+
+Randomized shapes/values for the three RL kernel families, asserting the
+Pallas kernels (interpret mode on CPU) equal the pure-JAX references
+*exactly* — the generators bias toward the edges the parametrized tests
+pin (T=1, B=1, non-power-of-two ring capacities, all-done trajectories,
+duplicate scatter indices).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import gae as gae_k
+from repro.kernels import replay_ring as ring_k
+from repro.kernels import sum_tree as tree_k
+
+# interpret-mode pallas launches are slow; keep the example budget tight
+# and the deadline off (first call per shape pays a trace)
+SETTINGS = dict(max_examples=20, deadline=None)
+
+finite = st.floats(-10.0, 10.0, allow_nan=False, width=32)
+
+
+def _arr(draw, shape, elements=finite):
+    vals = draw(st.lists(elements, min_size=int(np.prod(shape)),
+                         max_size=int(np.prod(shape))))
+    return jnp.asarray(np.asarray(vals, np.float32).reshape(shape))
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.integers(1, 24), st.integers(1, 6),
+       st.sampled_from(["none", "all", "random"]))
+def test_gae_parity_property(data, T, B, done_mode):
+    r = _arr(data.draw, (T, B))
+    v = _arr(data.draw, (T, B))
+    lv = _arr(data.draw, (B,))
+    if done_mode == "none":
+        d = jnp.zeros((T, B), bool)
+    elif done_mode == "all":
+        d = jnp.ones((T, B), bool)
+    else:
+        d = jnp.asarray(np.asarray(
+            data.draw(st.lists(st.booleans(), min_size=T * B,
+                               max_size=T * B))).reshape(T, B))
+    adv_r, ret_r = gae_k.gae(r, v, d, lv, impl="ref")
+    adv_p, ret_p = gae_k.gae(r, v, d, lv, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(adv_r), np.asarray(adv_p))
+    np.testing.assert_array_equal(np.asarray(ret_r), np.asarray(ret_p))
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.integers(0, 7), st.integers(1, 16))
+def test_sumtree_find_and_update_parity_property(data, cap_exp, B):
+    cap = 1 << cap_exp
+    leaves = _arr(data.draw, (cap,),
+                  st.floats(0.0, 10.0, allow_nan=False, width=32))
+    tree = tree_k.sumtree_build(leaves)
+    u = _arr(data.draw, (B,),
+             st.floats(0.0, 1.0, exclude_max=True, allow_nan=False,
+                       width=32))
+    masses = u * tree.total
+    np.testing.assert_array_equal(
+        np.asarray(tree_k.sumtree_find_batch(tree, masses, impl="ref")),
+        np.asarray(tree_k.sumtree_find_batch(tree, masses,
+                                             impl="pallas")))
+    idx = jnp.asarray(np.asarray(
+        data.draw(st.lists(st.integers(0, cap - 1), min_size=B,
+                           max_size=B)), np.int32))
+    vals = _arr(data.draw, (B,),
+                st.floats(0.0, 10.0, allow_nan=False, width=32))
+    t_r = tree_k.sumtree_update(tree, idx, vals, impl="ref")
+    t_p = tree_k.sumtree_update(tree, idx, vals, impl="pallas")
+    for a, b in zip(t_r.levels, t_p.levels):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.integers(1, 24), st.integers(1, 24),
+       st.integers(0, 23), st.integers(1, 8))
+def test_ring_parity_property(data, cap, n, start, B):
+    start = start % cap
+    storage = {"x": _arr(data.draw, (cap, 2)),
+               "r": _arr(data.draw, (cap,))}
+    batch = {"x": _arr(data.draw, (n, 2)), "r": _arr(data.draw, (n,))}
+    s_r = ring_k.ring_insert(storage, batch, jnp.int32(start), impl="ref")
+    s_p = ring_k.ring_insert(storage, batch, jnp.int32(start),
+                             impl="pallas")
+    for k in s_r:
+        np.testing.assert_array_equal(np.asarray(s_r[k]),
+                                      np.asarray(s_p[k]))
+    idx = jnp.asarray(np.asarray(
+        data.draw(st.lists(st.integers(0, cap - 1), min_size=B,
+                           max_size=B)), np.int32))
+    g_r = ring_k.ring_gather(s_r, idx, impl="ref")
+    g_p = ring_k.ring_gather(s_r, idx, impl="pallas")
+    for k in g_r:
+        np.testing.assert_array_equal(np.asarray(g_r[k]),
+                                      np.asarray(g_p[k]))
