@@ -7,31 +7,51 @@
 * Fig 6 — % of iteration time in learning vs collection, vs N.
 * Fig 7 — absolute policy-learning time per iteration vs N (~flat).
 
-Scaled for a 1-core CPU container: budget defaults to 4096 samples /
+Scaled for a small CPU container: budget defaults to 4096 samples /
 iteration instead of the paper's 20000 (same shape of the curves; the
 measurement is the per-sampler critical path, see benchmarks/common.py).
 
 Every figure runs for any registered algorithm through the unified
 experiment API — ``python -m benchmarks.fig_parallel --algo {ppo,trpo,ddpg}``
-produces the cross-algo grid the paper's PPO-only plots could not.
+produces the cross-algo grid the paper's PPO-only plots could not — and
+on any sampler backend: ``--backend process`` reruns the whole sweep with
+*real worker processes* over shared-memory transport (the paper's actual
+N-process deployment; DESIGN.md §6), where the critical path is genuine
+wall-clock concurrency rather than inline's max-over-serial-runs.
+``--quick`` shrinks the sweep (N ∈ {1,2,4}, smaller budget, no Fig 3)
+for CI artifact runs.
 """
 from __future__ import annotations
 
 import json
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 from benchmarks.common import build_walle, emit
 
 NS = (1, 2, 4, 8, 10)
 
-# SamplerBackend the figure harness schedules collection with ("inline"
-# reproduces the paper's single-host measurement; "threaded"/"sharded"
-# measure real concurrency on multi-core/multi-device hosts).
+# Default SamplerBackend the figure harness schedules collection with
+# ("inline" reproduces the paper's single-host measurement; "threaded" /
+# "process" measure real concurrency on multi-core hosts).
 BACKEND = "inline"
 
 
+def _sfx(backend: str) -> str:
+    """Benchmark-name suffix: inline rows keep their historical names so
+    the recorded trajectory stays comparable across revisions."""
+    return "" if backend == BACKEND else f"_{backend}"
+
+
+def _run_closed(runner, iterations: int):
+    try:
+        return runner.run(iterations)
+    finally:
+        runner.close()
+
+
 def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
-                       per_sampler: int = 2048, algo: str = "ppo") -> Dict:
+                       per_sampler: int = 2048, algo: str = "ppo",
+                       backend: str = BACKEND) -> Dict:
     """The paper's comparison: N=10 vs N=1 at equal *wall-clock*.
 
     Each sampler does the same work per iteration (same env batch, same
@@ -43,83 +63,95 @@ def fig3_return_curves(env_name: str = "pendulum", iterations: int = 10,
     out = {}
     for n in (1, 10):
         runner = build_walle(env_name, n, per_sampler * n, env_batch=8,
-                             seed=42, backend=BACKEND, algo=algo)
-        logs = runner.run(iterations)
+                             seed=42, backend=backend, algo=algo)
+        logs = _run_closed(runner, iterations)
         rets = [l.mean_return for l in logs if l.mean_return != 0.0]
         out[f"N={n}"] = {
             "returns": [l.mean_return for l in logs],
             "collect_time": [l.collect_time for l in logs[1:]],
             "final_return": rets[-1] if rets else float("nan"),
         }
-        emit(f"fig3_{algo}_return_N{n}_final",
+        emit(f"fig3_{algo}_return_N{n}_final{_sfx(backend)}",
              sum(out[f"N={n}"]["collect_time"]) * 1e6 / (iterations - 1),
              f"return={out[f'N={n}']['final_return']:.1f} "
              f"(samples/iter={per_sampler * n})")
     t1 = sum(out["N=1"]["collect_time"])
     t10 = sum(out["N=10"]["collect_time"])
     gain = out["N=10"]["final_return"] - out["N=1"]["final_return"]
-    emit(f"fig3_{algo}_N10_vs_N1", 0.0,
+    emit(f"fig3_{algo}_N10_vs_N1{_sfx(backend)}", 0.0,
          f"return_gain={gain:+.1f} at collect-time ratio "
          f"x{t10 / max(t1, 1e-9):.2f} (1.0 = equal wall-clock)")
     return out
 
 
 def fig4_rollout_time(env_name: str = "cheetah", budget: int = 4096,
-                      iterations: int = 3, algo: str = "ppo"
+                      iterations: int = 3, algo: str = "ppo",
+                      backend: str = BACKEND, ns: Sequence[int] = NS
                       ) -> Dict[int, float]:
     times = {}
-    for n in NS:
+    for n in ns:
         runner = build_walle(env_name, n, budget, env_batch=8, seed=7,
-                             backend=BACKEND, algo=algo)
-        logs = runner.run(iterations)
+                             backend=backend, algo=algo)
+        logs = _run_closed(runner, iterations)
         # skip iteration 0 (jit compile)
         ts = [l.collect_time for l in logs[1:]]
         times[n] = sum(ts) / len(ts)
-        emit(f"fig4_{algo}_rollout_time_N{n}", times[n] * 1e6,
-             f"samples={budget}")
+        emit(f"fig4_{algo}_rollout_time_N{n}{_sfx(backend)}",
+             times[n] * 1e6, f"samples={budget}")
     return times
 
 
-def fig5_speedup(times: Dict[int, float], algo: str = "ppo"
-                 ) -> Dict[int, float]:
+def fig5_speedup(times: Dict[int, float], algo: str = "ppo",
+                 backend: str = BACKEND) -> Dict[int, float]:
     t1 = times[1]
     speedups = {n: t1 / t for n, t in times.items()}
     for n, s in speedups.items():
         linear = "near-linear" if s > 0.6 * n else "sub-linear"
-        emit(f"fig5_{algo}_speedup_N{n}", times[n] * 1e6,
+        emit(f"fig5_{algo}_speedup_N{n}{_sfx(backend)}", times[n] * 1e6,
              f"x{s:.2f} ({linear})")
     return speedups
 
 
 def fig6_fig7_time_split(env_name: str = "cheetah", budget: int = 4096,
-                         iterations: int = 3, algo: str = "ppo") -> Dict:
+                         iterations: int = 3, algo: str = "ppo",
+                         backend: str = BACKEND,
+                         ns: Sequence[int] = NS) -> Dict:
     out = {}
-    for n in NS:
+    for n in ns:
         runner = build_walle(env_name, n, budget, env_batch=8, seed=13,
-                             backend=BACKEND, algo=algo)
-        logs = runner.run(iterations)
+                             backend=backend, algo=algo)
+        logs = _run_closed(runner, iterations)
         collect = sum(l.collect_time for l in logs[1:])
         learn = sum(l.learn_time for l in logs[1:])
         frac_learn = learn / (learn + collect)
         mean_learn = learn / (len(logs) - 1)
         out[n] = {"frac_learn": frac_learn, "learn_time": mean_learn}
-        emit(f"fig6_{algo}_learn_fraction_N{n}", 0.0,
+        emit(f"fig6_{algo}_learn_fraction_N{n}{_sfx(backend)}", 0.0,
              f"{100 * frac_learn:.1f}%")
-        emit(f"fig7_{algo}_learn_time_N{n}", mean_learn * 1e6,
-             "per-iteration")
+        emit(f"fig7_{algo}_learn_time_N{n}{_sfx(backend)}",
+             mean_learn * 1e6, "per-iteration")
     return out
 
 
 def run_all(out_path: str = "results/paper_figs.json",
-            algo: str = "ppo") -> None:
+            algo: str = "ppo", backend: str = BACKEND,
+            quick: bool = False) -> None:
     import os
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    results = {"algo": algo, "fig3": fig3_return_curves(algo=algo)}
-    times = fig4_rollout_time(algo=algo)
+    ns: Sequence[int] = (1, 2, 4) if quick else NS
+    budget = 1024 if quick else 4096
+    iterations = 2 if quick else 3
+    results: Dict = {"algo": algo, "backend": backend, "quick": quick}
+    if not quick:        # fig3 is the expensive return-quality comparison
+        results["fig3"] = fig3_return_curves(algo=algo, backend=backend)
+    times = fig4_rollout_time(algo=algo, backend=backend, ns=ns,
+                              budget=budget, iterations=iterations)
     results["fig4"] = times
-    results["fig5"] = fig5_speedup(times, algo=algo)
-    results["fig6_fig7"] = fig6_fig7_time_split(algo=algo)
+    results["fig5"] = fig5_speedup(times, algo=algo, backend=backend)
+    results["fig6_fig7"] = fig6_fig7_time_split(
+        algo=algo, backend=backend, ns=ns, budget=budget,
+        iterations=iterations)
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2, default=float)
 
@@ -132,10 +164,19 @@ if __name__ == "__main__":
     ap.add_argument("--algo", default="ppo",
                     choices=registry.choices("algo"),
                     help="which registered algorithm to measure")
+    ap.add_argument("--backend", default=BACKEND,
+                    choices=("inline", "threaded", "process"),
+                    help="sampler backend the sweep schedules collection "
+                         "with ('process' = real worker processes)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sweep: N in {1,2,4}, smaller budget, "
+                         "no Fig 3")
     ap.add_argument("--out", default=None,
                     help="results JSON path (default: "
-                         "results/paper_figs_<algo>.json)")
+                         "results/paper_figs_<algo>[_<backend>].json)")
     args = ap.parse_args()
-    out = args.out or f"results/paper_figs_{args.algo}.json"
+    out = args.out or (f"results/paper_figs_{args.algo}"
+                       f"{_sfx(args.backend)}.json")
     print("name,us_per_call,derived")
-    run_all(out_path=out, algo=args.algo)
+    run_all(out_path=out, algo=args.algo, backend=args.backend,
+            quick=args.quick)

@@ -10,6 +10,8 @@ of evaporating into stdout. Sections:
   fused       fused-engine dispatch-overhead savings
   replay      experience-plane adds/sec + samples/sec per buffer kind
               (including kernel-plane ref/pallas rows for prioritized)
+  sampler     actor-plane scaling: samples/sec vs N per backend
+              (inline vs threaded vs true worker processes) [DESIGN.md §6]
   kernels_lm  attn_* / selective_scan_* / decode_step_* sampler benches
   kernels_rl  gae / sum_tree / replay_ring ref-vs-pallas  [DESIGN.md §5]
   roofline    three-term roofline per (arch x shape x mesh)
@@ -34,11 +36,12 @@ import time
 
 def _sections():
     from benchmarks import fig_parallel, fused_vs_stepped, kernel_bench, \
-        replay_bench, roofline
+        replay_bench, roofline, sampler_scaling
     return {
         "fig": fig_parallel.run_all,
         "fused": fused_vs_stepped.run_all,
         "replay": replay_bench.run_all,
+        "sampler": sampler_scaling.run_all,
         "kernels_lm": kernel_bench.run_lm,
         "kernels_rl": kernel_bench.run_rl,
         "roofline": roofline.main,

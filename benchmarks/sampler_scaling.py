@@ -1,0 +1,71 @@
+"""The actor-plane scaling row: samples/sec vs N, per sampler backend.
+
+The paper's central claim — N parallel sampler processes dominate
+single-process collection — tracked release-over-release. For each
+backend (inline = the serial single-host measurement, threaded = in-
+process fan-out, process = true worker processes over shared-memory
+transport) the same fixed per-iteration sample budget is split across
+N ∈ ``NS`` samplers and the steady-state collection critical path is
+measured (iteration 0 excluded: jit compile; the *minimum* over the
+remaining iterations is reported to keep the row stable on noisy CI
+hosts). Rows land in ``BENCH_<rev>.json`` via ``benchmarks/run.py
+--sections sampler`` with a parsed ``samples_per_sec`` metric, so the
+scaling trajectory is recorded per revision.
+
+On any multi-core host the expectation is monotonically non-decreasing
+samples/sec in N for the ``process`` backend: each worker owns its own
+interpreter and XLA client, so adding workers shrinks the per-worker
+budget without adding GIL or dispatch-queue contention.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+from benchmarks.common import build_walle, emit
+
+NS: Tuple[int, ...] = (1, 2, 4)
+BACKENDS: Tuple[str, ...] = ("inline", "threaded", "process")
+
+
+def sweep(backend: str, ns: Sequence[int] = NS, budget: int = 2048,
+          env_batch: int = 4, iterations: int = 10, repeats: int = 2,
+          env_name: str = "pendulum") -> Dict[int, float]:
+    """samples/sec for each N on one backend (fixed total budget).
+
+    Each N is measured ``repeats`` times end-to-end and the best run is
+    reported (external interference on a shared host only ever *slows* a
+    run, so max-over-runs of min-over-iterations estimates the true
+    achievable throughput).
+    """
+    out = {}
+    for n in ns:
+        best = 0.0
+        for _ in range(repeats):
+            runner = build_walle(env_name, n, budget, env_batch=env_batch,
+                                 seed=3, backend=backend)
+            try:
+                logs = runner.run(iterations)
+            finally:
+                runner.close()
+            critical = min(log.collect_time for log in logs[1:])
+            best = max(best, logs[1].samples / critical)
+        out[n] = best
+        emit(f"sampler_{backend}_N{n}", logs[1].samples / best * 1e6,
+             f"samples_per_sec={best:.0f} n={n} budget={budget}")
+    return out
+
+
+def run_all(ns: Sequence[int] = NS,
+            backends: Sequence[str] = BACKENDS) -> Dict[str, Dict[int, float]]:
+    return {backend: sweep(backend, ns=ns) for backend in backends}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default=",".join(BACKENDS))
+    ap.add_argument("--ns", default=",".join(map(str, NS)))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_all(ns=tuple(int(n) for n in args.ns.split(",")),
+            backends=tuple(b for b in args.backends.split(",") if b))

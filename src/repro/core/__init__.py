@@ -19,11 +19,13 @@ from repro.core import (  # noqa: F401
 from repro.core.backends import (  # noqa: F401
     CollectStats,
     InlineBackend,
+    ProcessBackend,
     SamplerBackend,
     ShardedBackend,
     ThreadedBackend,
     make_backend,
 )
+from repro.core.sampler import WorkerSpec  # noqa: F401
 from repro.core.fused import FusedRunner, TrainState, make_fused_train_loop  # noqa: F401
 from repro.core.orchestrator import (  # noqa: F401
     AsyncOrchestrator,

@@ -20,6 +20,15 @@ Backends:
 * ``ShardedBackend``  — the accelerator-native form: ``shard_map`` places
   one sampler per ``data``-axis mesh slice; the trajectory is *born
   sharded* and never merged on host.
+* ``ProcessBackend``  — the paper's actual deployment shape: N worker
+  *processes* (own interpreter, own XLA client — no GIL or dispatch-queue
+  contention with the learner), rebuilt from serializable ``WorkerSpec``s
+  and fed through shared-memory transport (``core/ipc.py``). Trajectories
+  merge in deterministic worker-index order, so ``process == inline``
+  exactly for matched per-worker seeds (DESIGN.md §6).
+
+Every backend is a context manager; ``close()`` releases whatever it
+holds (thread pools, worker processes, shared memory) and is idempotent.
 """
 from __future__ import annotations
 
@@ -52,12 +61,31 @@ class CollectStats:
 
 
 class SamplerBackend(Protocol):
-    """collect(params) -> (merged_traj, stats); carries are backend-owned."""
+    """collect(params) -> (merged_traj, stats); carries are backend-owned.
+    ``close()`` releases backend-held resources (idempotent)."""
 
     num_samplers: int
 
     def collect(self, params: Any) -> tuple:
         ...
+
+    def close(self) -> None:
+        ...
+
+
+class BackendCloseMixin:
+    """Context-manager + no-op ``close`` shared by every backend, so
+    ``experiment.run`` can unconditionally release any backend in its
+    ``finally`` (threads, worker processes, shared memory — or nothing)."""
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def timed_rollout(rollout: Callable, params: Any, carry: Any):
@@ -73,7 +101,7 @@ def merge_trajs(trajs: Sequence[Any]) -> Any:
 
 
 # ================================================================== inline
-class InlineBackend:
+class InlineBackend(BackendCloseMixin):
     """Today's serial sweep: N logical samplers executed back-to-back."""
 
     def __init__(self, rollout: Callable, carries: List[Any]):
@@ -93,7 +121,7 @@ class InlineBackend:
 
 
 # ================================================================ threaded
-class ThreadedBackend:
+class ThreadedBackend(BackendCloseMixin):
     """Fan-out/join over sampler threads (AsyncOrchestrator's sampler loop,
     made synchronous): each sampler dispatches its jitted rollout from its
     own thread; the critical path is genuinely the max over samplers."""
@@ -125,7 +153,7 @@ class ThreadedBackend:
 
 
 # ================================================================= sharded
-class ShardedBackend:
+class ShardedBackend(BackendCloseMixin):
     """One sampler per ``data``-axis mesh slice via ``make_sharded_rollout``.
 
     The carry holds the *global* env batch; shard_map splits it so each
@@ -149,6 +177,36 @@ class ShardedBackend:
                 self.rollout, params, self.carry)
         stats = CollectStats([dt], trajectory.num_samples(traj))
         return traj, stats
+
+
+# ================================================================= process
+class ProcessBackend(BackendCloseMixin):
+    """N rollout worker *processes* behind the ``collect`` contract.
+
+    Each worker owns its own interpreter and XLA client — rollouts never
+    contend with the learner for the GIL or the dispatch queue, which is
+    the paper's actual N-sampler-process deployment (and what inline/
+    threaded only approximate from one process). Params go out through a
+    versioned shared-memory channel (one publish per ``collect``, not one
+    pickle per worker); trajectories come back through the shared-memory
+    ring and merge **in worker-index order**, so with matched per-worker
+    seeds the merged trajectory is exactly the inline backend's
+    (DESIGN.md §6). Worker death or an in-worker exception surfaces as
+    ``ipc.WorkerCrashed`` from ``collect``; ``close`` reaps everything.
+    """
+
+    def __init__(self, pool):
+        self.pool = pool
+        self.num_samplers = pool.num_workers
+
+    def collect(self, params):
+        self.pool.publish(params)
+        trajs, times, _loops = self.pool.collect()
+        merged = merge_trajs(trajs)
+        return merged, CollectStats(times, trajectory.num_samples(merged))
+
+    def close(self) -> None:
+        self.pool.close()
 
 
 def _build_inline(*, rollout: Callable, carries: List[Any], **_ignored):
@@ -199,9 +257,38 @@ def _build_sharded(*, carries: List[Any], env=None,
     return ShardedBackend(sharded, carry, mesh)
 
 
+def build_worker_pool(*, rollout: Callable, carries: List[Any],
+                      worker_specs: Sequence[Any], params: Any,
+                      slots_per_worker: int = 1):
+    """Spawn a ``ProcessWorkerPool`` for ``worker_specs``.
+
+    ``rollout``/``carries`` are the *parent-side* builds of the same spec
+    — used only under ``eval_shape`` to size the shared-memory ring (no
+    rollout runs here); ``params`` sizes the params channel.
+    """
+    from repro.core import ipc
+    traj_example = jax.eval_shape(
+        lambda p, c: rollout(p, c)[1], params, carries[0])
+    return ipc.ProcessWorkerPool(worker_specs, params, traj_example,
+                                 slots_per_worker=slots_per_worker)
+
+
+def _build_process(*, rollout: Callable, carries: List[Any],
+                   worker_specs: Optional[Sequence[Any]] = None,
+                   params: Any = None, **_ignored):
+    assert worker_specs is not None and params is not None, (
+        "the process backend is built from serializable WorkerSpecs plus "
+        "the learner's params (to size the shared-memory channel); "
+        "construct it through repro.experiment (backend='process')")
+    return ProcessBackend(build_worker_pool(
+        rollout=rollout, carries=carries, worker_specs=worker_specs,
+        params=params, slots_per_worker=1))
+
+
 registry.register("backend", "inline", _build_inline)
 registry.register("backend", "threaded", _build_threaded)
 registry.register("backend", "sharded", _build_sharded)
+registry.register("backend", "process", _build_process)
 
 
 def make_backend(kind: str, rollout: Callable, carries: List[Any],

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampler as sampler_mod
+from repro.core.backends import BackendCloseMixin
 from repro.data import trajectory
 
 
@@ -84,8 +85,9 @@ def make_fused_train_loop(env, learn: Optional[Callable], horizon: int,
     return train_chunk
 
 
-class FusedRunner:
-    """Runner-shaped driver over the fused loop.
+class FusedRunner(BackendCloseMixin):
+    """Runner-shaped driver over the fused loop; ``close`` is the
+    mixin's no-op (nothing host-side to release).
 
     The fused engine has no host-visible collect/learn boundary — that is
     the point — so ``IterationLog.collect_time``/``collect_time_serial``

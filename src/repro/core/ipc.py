@@ -1,0 +1,629 @@
+"""Shared-memory IPC for the actor plane (DESIGN.md §6).
+
+WALL-E's sampler parallelism is *process*-level: N rollout workers, each
+owning its own Python interpreter and XLA client, feed one learner. The
+transport here moves trajectories and policy parameters across the
+process boundary without pickling arrays per iteration:
+
+* ``ShmRing`` — a slotted trajectory ring: one
+  ``multiprocessing.shared_memory`` block per trajectory leaf (numpy
+  views, zero-copy on the writer side) plus seqlock-style slot headers
+  (sequence counter: odd = write in progress, even = stable; an ``ack``
+  counter lets the producer block until its previous slot was consumed).
+* ``ParamsChannel`` — a versioned params cell generalizing
+  ``core.queues.PolicyStore`` across processes: the learner publishes
+  flattened param leaves into fixed shared blocks; workers poll a version
+  word and copy only when it changed, so params cross the boundary once
+  per *publish*, not once per rollout.
+* ``ProcessWorkerPool`` — spawns N workers (``spawn`` start method; no
+  closures cross the boundary — each worker rebuilds its jitted rollout
+  from a serializable ``core.sampler.WorkerSpec`` purely via the
+  registry), drives them in lock-step (``collect``) or free-running mode
+  (``start_freerun``/``next_experience``), surfaces worker crashes as
+  ``WorkerCrashed``, and reaps everything on ``close``.
+
+Memory-ordering note: the seqlock headers are consistency *checks*; the
+ordering guarantee producers rely on is the command/result queue
+handshake (a pipe write/read pair is a full barrier), so the protocol
+does not depend on fenced stores into the mmap.
+"""
+from __future__ import annotations
+
+import atexit
+import dataclasses
+import os
+import queue as _queue
+import time
+import traceback
+import uuid
+from multiprocessing import shared_memory
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# slot header layout: int64 words per slot ...
+_H_SEQ, _H_ACK, _H_VERSION, _H_WORKER = 0, 1, 2, 3
+_HDR_I = 4
+# ... plus float64 words per slot
+_H_COLLECT_S, _H_LOOP_S = 0, 1
+_HDR_F = 2
+
+
+class WorkerCrashed(RuntimeError):
+    """A rollout worker process died or raised; message carries details."""
+
+
+# Resource-tracker note: Python 3.10 registers every ``SharedMemory``
+# with the resource tracker even when attaching (``create=False``). That
+# is benign here — worker processes are spawned by ``multiprocessing`` and
+# therefore share the *parent's* tracker, whose cache is a name-keyed set:
+# a child's attach-registration is a no-op add, and the parent's ``unlink``
+# unregisters the name exactly once. (Explicitly unregistering in children
+# would instead strip the parent's registration and raise KeyErrors in the
+# tracker at shutdown.)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Shape/dtype of one pytree leaf inside a shared block (picklable)."""
+    key: str
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    """Everything a fresh process needs to attach to a ``ShmRing``."""
+    prefix: str
+    slots: int
+    leaves: Tuple[LeafSpec, ...]
+
+
+def _leaf_specs(example: Dict[str, Any]) -> Tuple[LeafSpec, ...]:
+    """Sorted-key leaf specs from a dict of arrays/ShapeDtypeStructs."""
+    return tuple(
+        LeafSpec(key=k, shape=tuple(example[k].shape),
+                 dtype=np.dtype(example[k].dtype).str)
+        for k in sorted(example))
+
+
+class ShmRing:
+    """Slotted trajectory ring over one shared block per trajectory leaf.
+
+    Slot ``s`` of leaf ``k`` is the numpy view ``self.views[k][s]``; the
+    header block carries per-slot ``(seq, ack, policy_version, worker_id)``
+    int64 words and ``(collect_seconds, loop_seconds)`` float64 words.
+    Writers bump ``seq`` to odd before touching the payload and to even
+    after; readers copy then re-check ``seq``. ``ack`` is written by the
+    consumer (``ack(slot)``) so a producer can wait until its previous
+    write was drained (``is_free``) — the ring's only backpressure.
+    """
+
+    def __init__(self, spec: RingSpec, create: bool):
+        self.spec = spec
+        self._shms: List[shared_memory.SharedMemory] = []
+        self.views: Dict[str, np.ndarray] = {}
+        for i, leaf in enumerate(spec.leaves):
+            nbytes = (spec.slots * int(np.prod(leaf.shape, dtype=np.int64))
+                      * np.dtype(leaf.dtype).itemsize)
+            shm = self._open(f"{spec.prefix}-l{i}", create, max(nbytes, 8))
+            self.views[leaf.key] = np.ndarray(
+                (spec.slots, *leaf.shape), dtype=leaf.dtype, buffer=shm.buf)
+        hdr_bytes = spec.slots * (_HDR_I * 8 + _HDR_F * 8)
+        shm = self._open(f"{spec.prefix}-hdr", create, hdr_bytes)
+        self._hdr_i = np.ndarray((spec.slots, _HDR_I), dtype=np.int64,
+                                 buffer=shm.buf, offset=0)
+        self._hdr_f = np.ndarray((spec.slots, _HDR_F), dtype=np.float64,
+                                 buffer=shm.buf,
+                                 offset=spec.slots * _HDR_I * 8)
+        if create:
+            self._hdr_i.fill(0)
+            self._hdr_f.fill(0.0)
+
+    def _open(self, name: str, create: bool,
+              size: int) -> shared_memory.SharedMemory:
+        shm = shared_memory.SharedMemory(
+            name=name, create=create, size=size if create else 0)
+        self._shms.append(shm)
+        return shm
+
+    @classmethod
+    def create(cls, example: Dict[str, Any], slots: int,
+               prefix: str) -> "ShmRing":
+        return cls(RingSpec(prefix=prefix, slots=slots,
+                            leaves=_leaf_specs(example)), create=True)
+
+    @classmethod
+    def attach(cls, spec: RingSpec) -> "ShmRing":
+        return cls(spec, create=False)
+
+    # ------------------------------------------------------------- producer
+    def write(self, slot: int, traj: Dict[str, np.ndarray], *,
+              worker_id: int, policy_version: int,
+              collect_seconds: float, loop_seconds: float) -> None:
+        seq = int(self._hdr_i[slot, _H_SEQ])
+        self._hdr_i[slot, _H_SEQ] = seq + 1          # odd: write in progress
+        for leaf in self.spec.leaves:
+            self.views[leaf.key][slot][...] = traj[leaf.key]
+        self._hdr_i[slot, _H_VERSION] = policy_version
+        self._hdr_i[slot, _H_WORKER] = worker_id
+        self._hdr_f[slot, _H_COLLECT_S] = collect_seconds
+        self._hdr_f[slot, _H_LOOP_S] = loop_seconds
+        self._hdr_i[slot, _H_SEQ] = seq + 2          # even: stable
+
+    def is_free(self, slot: int) -> bool:
+        """True when the consumer acked everything written to ``slot``."""
+        return int(self._hdr_i[slot, _H_ACK]) == int(
+            self._hdr_i[slot, _H_SEQ])
+
+    # ------------------------------------------------------------- consumer
+    def read(self, slot: int) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """Copy one slot out; retries (bounded) on a torn seqlock read."""
+        for _ in range(1000):
+            s1 = int(self._hdr_i[slot, _H_SEQ])
+            if s1 % 2:                                # writer mid-flight
+                time.sleep(1e-4)
+                continue
+            traj = {leaf.key: np.array(self.views[leaf.key][slot])
+                    for leaf in self.spec.leaves}
+            meta = {
+                "policy_version": int(self._hdr_i[slot, _H_VERSION]),
+                "worker_id": int(self._hdr_i[slot, _H_WORKER]),
+                "collect_seconds": float(self._hdr_f[slot, _H_COLLECT_S]),
+                "loop_seconds": float(self._hdr_f[slot, _H_LOOP_S]),
+            }
+            if int(self._hdr_i[slot, _H_SEQ]) == s1:
+                return traj, meta
+        raise WorkerCrashed(
+            f"trajectory ring slot {slot} never stabilized (torn seqlock "
+            f"read 1000x) — a worker is stuck mid-write")
+
+    def ack(self, slot: int) -> None:
+        self._hdr_i[slot, _H_ACK] = self._hdr_i[slot, _H_SEQ]
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self, unlink: bool = False) -> None:
+        # drop numpy views before closing the mmaps they point into
+        self.views = {}
+        self._hdr_i = self._hdr_f = None
+        for shm in self._shms:
+            try:
+                shm.close()
+                if unlink:
+                    shm.unlink()
+            except FileNotFoundError:
+                pass
+        self._shms = []
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """Attach info for a ``ParamsChannel`` (picklable)."""
+    prefix: str
+    leaves: Tuple[LeafSpec, ...]
+
+
+class ParamsChannel:
+    """Versioned cross-process params cell — ``PolicyStore`` over shm.
+
+    One shared block per flattened param leaf plus a single seqlock word:
+    ``publish`` bumps it to odd, overwrites every leaf, bumps to even;
+    ``version == seq // 2`` counts publishes. Readers (``read``) spin
+    until the version moves past ``min_version``, copy, and re-check —
+    so workers always act with the freshest published policy (possibly
+    stale, never torn) and pay the copy only when it actually changed.
+    """
+
+    def __init__(self, spec: ChannelSpec, create: bool):
+        self.spec = spec
+        self._shms: List[shared_memory.SharedMemory] = []
+        self._views: List[np.ndarray] = []
+        for i, leaf in enumerate(spec.leaves):
+            nbytes = (int(np.prod(leaf.shape, dtype=np.int64))
+                      * np.dtype(leaf.dtype).itemsize)
+            shm = self._open(f"{spec.prefix}-l{i}", create, max(nbytes, 8))
+            self._views.append(np.ndarray(leaf.shape, dtype=leaf.dtype,
+                                          buffer=shm.buf))
+        shm = self._open(f"{spec.prefix}-hdr", create, 8)
+        self._hdr = np.ndarray((1,), dtype=np.int64, buffer=shm.buf)
+        if create:
+            self._hdr[0] = 0
+
+    def _open(self, name: str, create: bool,
+              size: int) -> shared_memory.SharedMemory:
+        shm = shared_memory.SharedMemory(
+            name=name, create=create, size=size if create else 0)
+        self._shms.append(shm)
+        return shm
+
+    @classmethod
+    def create(cls, leaves: Sequence[np.ndarray],
+               prefix: str) -> "ParamsChannel":
+        spec = ChannelSpec(prefix=prefix, leaves=tuple(
+            LeafSpec(key=str(i), shape=tuple(x.shape),
+                     dtype=np.dtype(x.dtype).str)
+            for i, x in enumerate(leaves)))
+        return cls(spec, create=True)
+
+    @classmethod
+    def attach(cls, spec: ChannelSpec) -> "ParamsChannel":
+        return cls(spec, create=False)
+
+    @property
+    def version(self) -> int:
+        return int(self._hdr[0]) // 2
+
+    def publish(self, leaves: Sequence[np.ndarray]) -> int:
+        if len(leaves) != len(self._views):
+            raise ValueError(
+                f"params channel holds {len(self._views)} leaves, "
+                f"publish got {len(leaves)}")
+        seq = int(self._hdr[0])
+        self._hdr[0] = seq + 1
+        for view, leaf in zip(self._views, leaves):
+            view[...] = leaf
+        self._hdr[0] = seq + 2
+        return (seq + 2) // 2
+
+    def read(self, min_version: int = 0, last_version: int = -1,
+             should_stop: Optional[Callable[[], bool]] = None,
+             poll: float = 1e-4
+             ) -> Tuple[Optional[List[np.ndarray]], int]:
+        """Block until ``version >= min_version``; return
+        ``(leaf_copies, version)`` — leaves are ``None`` when the version
+        equals ``last_version`` (nothing new to copy) or when
+        ``should_stop()`` fired (version reported as -1)."""
+        while True:
+            s1 = int(self._hdr[0])
+            if s1 % 2 == 0 and s1 // 2 >= min_version:
+                version = s1 // 2
+                if version == last_version:
+                    return None, version
+                out = [np.array(v) for v in self._views]
+                if int(self._hdr[0]) == s1:
+                    return out, version
+                continue                              # torn read: retry
+            if should_stop is not None and should_stop():
+                return None, -1
+            time.sleep(poll)
+
+    def close(self, unlink: bool = False) -> None:
+        self._views = []
+        self._hdr = None
+        for shm in self._shms:
+            try:
+                shm.close()
+                if unlink:
+                    shm.unlink()
+            except FileNotFoundError:
+                pass
+        self._shms = []
+
+
+# ======================================================= the worker process
+def _worker_main(spec_dict: Dict[str, Any], ring_spec: RingSpec,
+                 chan_spec: ChannelSpec, worker_id: int, slot_base: int,
+                 num_slots: int, cmd_q, res_q) -> None:
+    """Entry point of one rollout worker process.
+
+    Rebuilds env/algo/rollout from the serialized ``WorkerSpec`` purely
+    via the registry (nothing else crossed the boundary), then serves:
+
+      ("collect", v) — one rollout under params version >= v, write slot,
+                       report;  the lock-step mode ``ProcessBackend`` uses
+      ("freerun", v) — roll continuously with the freshest published
+                       params, blocking only when the ring slot has not
+                       been consumed; the ``AsyncOrchestrator`` mode
+      ("stop",)      — exit cleanly
+
+    Any exception is reported upstream as ("error", id, traceback) and
+    surfaces in the parent as ``WorkerCrashed``.
+    """
+    try:
+        # spread workers round-robin over the host's cores: deterministic
+        # placement avoids the migration thrash the kernel scheduler adds
+        # when workers outnumber cores (a worker never fights more peers
+        # than ceil(N / cores) for its core); a no-op gain when cores >= N
+        if hasattr(os, "sched_setaffinity"):
+            try:
+                cores = sorted(os.sched_getaffinity(0))
+                os.sched_setaffinity(
+                    0, {cores[worker_id % len(cores)]})
+            except OSError:
+                pass
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.sampler import WorkerSpec
+
+        spec = WorkerSpec.from_dict(spec_dict)
+        rollout, carry, params_template = spec.build()
+        rollout = jax.jit(rollout)
+        t_leaves, treedef = jax.tree_util.tree_flatten(params_template)
+        ring = ShmRing.attach(ring_spec)
+        chan = ParamsChannel.attach(chan_spec)
+        if len(t_leaves) != len(chan.spec.leaves):
+            raise RuntimeError(
+                f"worker {worker_id}: rebuilt params have "
+                f"{len(t_leaves)} leaves, channel carries "
+                f"{len(chan.spec.leaves)} — WorkerSpec and learner params "
+                f"disagree")
+        res_q.put(("ready", worker_id))
+
+        params, last_version = None, -1
+        freerunning, counter, stop = False, 0, False
+        while not stop:
+            if freerunning:
+                try:
+                    cmd = cmd_q.get_nowait()
+                except _queue.Empty:
+                    cmd = ("step", 0)
+            else:
+                cmd = cmd_q.get()
+            op = cmd[0]
+            if op == "stop":
+                break
+            if op == "freerun":
+                freerunning = True
+                continue
+            # op is "collect" (lock-step) or "step" (free-running)
+            min_version = cmd[1] if len(cmd) > 1 else 0
+            t_loop0 = time.perf_counter()
+            np_leaves, version = chan.read(min_version=min_version,
+                                           last_version=last_version)
+            if np_leaves is not None:
+                params = treedef.unflatten(
+                    [jnp.asarray(x) for x in np_leaves])
+                last_version = version
+            t0 = time.perf_counter()
+            carry, traj = rollout(params, carry)
+            traj = jax.block_until_ready(traj)
+            dt = time.perf_counter() - t0
+            traj_np = {k: np.asarray(v) for k, v in traj.items()}
+            slot = slot_base + (counter % num_slots)
+            while not ring.is_free(slot):      # learner behind: back off
+                try:
+                    nxt = cmd_q.get(timeout=0.002)
+                    if nxt[0] == "stop":
+                        stop = True
+                        break
+                except _queue.Empty:
+                    pass
+            if stop:
+                break
+            loop_dt = time.perf_counter() - t_loop0
+            ring.write(slot, traj_np, worker_id=worker_id,
+                       policy_version=last_version, collect_seconds=dt,
+                       loop_seconds=loop_dt)
+            res_q.put(("traj", worker_id, slot, last_version, dt,
+                       time.perf_counter() - t_loop0))
+            counter += 1
+        ring.close()
+        chan.close()
+    except Exception:
+        try:
+            res_q.put(("error", worker_id, traceback.format_exc()))
+        except Exception:
+            pass
+
+
+# ============================================================ the worker pool
+class ProcessWorkerPool:
+    """N rollout worker processes + the shared-memory transport between
+    them and this (learner) process.
+
+    Construction publishes the initial params (version 1), spawns the
+    workers and blocks until every one reports ready — a worker that dies
+    while importing/building surfaces immediately as ``WorkerCrashed``.
+
+    Two driving modes:
+
+    * ``collect()`` — lock-step: broadcast one ("collect", version)
+      command, await N results, return per-worker trajectories **in
+      worker-index order** (the determinism rule that makes
+      ``process == inline`` exact for matched per-worker seeds).
+    * ``start_freerun()`` + ``next_experience()`` — the async mode:
+      workers roll continuously against the freshest published params;
+      the learner drains finished slots as ``core.queues.Experience``
+      records. Backpressure is the ring itself (``slots_per_worker``
+      unconsumed rollouts per worker, then the worker blocks), so
+      nothing is ever dropped.
+
+    Workers are daemonic and additionally reaped by an ``atexit`` hook,
+    so Ctrl-C in the learner never leaves orphan samplers behind.
+    """
+
+    def __init__(self, worker_specs: Sequence[Any], params: Any,
+                 traj_example: Dict[str, Any], slots_per_worker: int = 1,
+                 start_timeout: float = 300.0,
+                 collect_timeout: float = 600.0):
+        import jax
+        import multiprocessing as mp
+
+        self.num_workers = len(worker_specs)
+        self.slots_per_worker = int(slots_per_worker)
+        self.collect_timeout = collect_timeout
+        self._closed = False
+        self._freerunning = False
+        ctx = mp.get_context("spawn")
+        prefix = f"walle-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        leaves = [np.asarray(jax.device_get(x))
+                  for x in jax.tree_util.tree_leaves(params)]
+        self.channel = ParamsChannel.create(leaves, prefix + "-p")
+        self.version = self.channel.publish(leaves)
+        self.ring = ShmRing.create(
+            traj_example, self.num_workers * self.slots_per_worker,
+            prefix + "-t")
+        self._cmd = [ctx.Queue() for _ in range(self.num_workers)]
+        self._res = ctx.Queue()
+        self._procs = [
+            ctx.Process(
+                target=_worker_main, name=f"walle-worker-{i}", daemon=True,
+                args=(spec.to_dict(), self.ring.spec, self.channel.spec,
+                      i, i * self.slots_per_worker, self.slots_per_worker,
+                      self._cmd[i], self._res))
+            for i, spec in enumerate(worker_specs)
+        ]
+        # Children inherit the environment at spawn; adjust it around
+        # start() only (the parent's own, already-initialized client is
+        # unaffected):
+        #  * rollout workers are host-side sampler processes — default
+        #    them to the CPU client unless a platform is pinned explicitly
+        #  * limit each worker's XLA CPU intra-op pool to one thread: N
+        #    workers x one multi-threaded eigen pool oversubscribes small
+        #    hosts and *slows* collection as N grows (bitwise-neutral for
+        #    rollout-sized ops — asserted by the process==inline parity
+        #    tests, which run the parent multi-threaded)
+        saved = {k: os.environ.get(k) for k in ("JAX_PLATFORMS",
+                                                "XLA_FLAGS")}
+        if saved["JAX_PLATFORMS"] is None:
+            os.environ["JAX_PLATFORMS"] = "cpu"
+        flags = saved["XLA_FLAGS"] or ""
+        if "intra_op_parallelism_threads" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_cpu_multi_thread_eigen=false "
+                "intra_op_parallelism_threads=1").strip()
+        try:
+            for p in self._procs:
+                p.start()
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+        atexit.register(self.close)
+        try:
+            ready = set()
+            while len(ready) < self.num_workers:
+                msg = self._get(timeout=start_timeout)
+                if msg[0] == "ready":
+                    ready.add(msg[1])
+        except BaseException:
+            self.close()
+            raise
+
+    # ------------------------------------------------------------- plumbing
+    def _check_alive(self) -> None:
+        dead = [(i, p.exitcode) for i, p in enumerate(self._procs)
+                if not p.is_alive()]
+        if dead:
+            raise WorkerCrashed(
+                "rollout worker(s) died: " + ", ".join(
+                    f"#{i} (exitcode={code})" for i, code in dead))
+
+    def _get(self, timeout: float):
+        """Next result-queue message; raises ``WorkerCrashed`` on worker
+        error/death and ``TimeoutError`` past ``timeout``."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                msg = self._res.get(timeout=0.25)
+            except _queue.Empty:
+                self._check_alive()
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"no worker result within {timeout:.0f}s")
+                continue
+            if msg[0] == "error":
+                raise WorkerCrashed(
+                    f"rollout worker #{msg[1]} raised:\n{msg[2]}")
+            return msg
+
+    def _read_slot(self, slot: int):
+        traj, meta = self.ring.read(slot)
+        self.ring.ack(slot)
+        return traj, meta
+
+    # ------------------------------------------------------------ lock-step
+    def publish(self, params: Any) -> int:
+        import jax
+        self.version = self.channel.publish(
+            [np.asarray(jax.device_get(x))
+             for x in jax.tree_util.tree_leaves(params)])
+        return self.version
+
+    def collect(self) -> Tuple[List[Dict[str, np.ndarray]], List[float],
+                               List[float]]:
+        """One lock-step sweep: every worker rolls once under the current
+        params version; trajectories come back in worker-index order."""
+        if self._closed:
+            raise RuntimeError("worker pool is closed")
+        if self._freerunning:
+            raise RuntimeError(
+                "pool is free-running (async mode); lock-step collect() "
+                "would interleave with unsolicited rollouts")
+        version = self.channel.version
+        for q in self._cmd:
+            q.put(("collect", version))
+        got: Dict[int, Tuple[int, float, float]] = {}
+        while len(got) < self.num_workers:
+            _, wid, slot, _v, dt, loop_dt = self._get(self.collect_timeout)
+            got[wid] = (slot, dt, loop_dt)
+        trajs, times, loops = [], [], []
+        for i in range(self.num_workers):        # deterministic merge order
+            slot, dt, loop_dt = got[i]
+            traj, _meta = self._read_slot(slot)
+            trajs.append(traj)
+            times.append(dt)
+            loops.append(loop_dt)
+        return trajs, times, loops
+
+    # ------------------------------------------------------------- freerun
+    def start_freerun(self) -> None:
+        if self._freerunning:
+            return
+        self._freerunning = True
+        for q in self._cmd:
+            q.put(("freerun",))
+
+    def next_experience(self, timeout: float = 1.0):
+        """Drain one finished rollout as ``(Experience, loop_seconds)``;
+        ``None`` if nothing finished within ``timeout``."""
+        from repro.core.queues import Experience
+        try:
+            _, wid, slot, version, dt, _loop = self._get(timeout)
+        except TimeoutError:
+            return None
+        traj, meta = self._read_slot(slot)
+        return (Experience(traj=traj, policy_version=version,
+                           sampler_id=wid, collect_seconds=dt),
+                meta["loop_seconds"])
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        """Stop, join (terminate stragglers) and unlink all shared state.
+        Idempotent; also runs from ``atexit`` so Ctrl-C reaps workers."""
+        if self._closed:
+            return
+        self._closed = True
+        for q in self._cmd:
+            try:
+                q.put_nowait(("stop",))
+            except Exception:
+                pass
+        for p in self._procs:
+            p.join(timeout=3.0)
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs:
+            p.join(timeout=3.0)
+        for q in [*self._cmd, self._res]:
+            try:
+                q.close()
+                q.cancel_join_thread()
+            except Exception:
+                pass
+        self.ring.close(unlink=True)
+        self.channel.close(unlink=True)
+        try:
+            atexit.unregister(self.close)
+        except Exception:
+            pass
+
+    def __enter__(self) -> "ProcessWorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

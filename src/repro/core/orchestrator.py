@@ -24,6 +24,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 
 from repro.core.backends import (
+    BackendCloseMixin,
     InlineBackend,
     SamplerBackend,
     merge_trajs,
@@ -42,9 +43,14 @@ class IterationLog:
     learn_time: float
     mean_return: float
     samples: int
-    staleness: float = 0.0
+    staleness: float = 0.0       # params-staleness: mean (learner version -
+                                 # version the sampler acted with)
     queue_drops: int = 0         # async: cumulative experiences dropped on
                                  # queue overflow (backpressure signal)
+    worker_utilization: float = 1.0   # fraction of worker wall time spent
+                                      # actually rolling out (vs waiting on
+                                      # params/slots); < 1 only measurable
+                                      # for free-running process workers
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -73,7 +79,8 @@ def timed_train_step(train_step: Callable, params, opt_state, plane_state,
 def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
                  learn_time: float, merged, samples: Optional[int] = None,
                  staleness: float = 0.0,
-                 queue_drops: int = 0) -> IterationLog:
+                 queue_drops: int = 0,
+                 worker_utilization: float = 1.0) -> IterationLog:
     """The single definition of per-iteration accounting (sync + async)."""
     return IterationLog(
         iteration=iteration,
@@ -85,6 +92,7 @@ def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
                  else trajectory.num_samples(merged)),
         staleness=staleness,
         queue_drops=queue_drops,
+        worker_utilization=worker_utilization,
     )
 
 
@@ -96,7 +104,7 @@ def record_log(logs: List[IterationLog], timer: PhaseTimer,
 
 
 # ================================================================== sync
-class SyncRunner:
+class SyncRunner(BackendCloseMixin):
     """collect (backend) -> learn -> repeat.
 
     Backward-compatible construction: pass ``(rollout, learn, params,
@@ -156,9 +164,15 @@ class SyncRunner:
                                     learn_time, merged, stats.samples))
         return self.logs
 
+    def close(self) -> None:
+        """Release the backend (thread pools, worker processes, shm)."""
+        close = getattr(self.backend, "close", None)
+        if close is not None:        # pre-protocol custom backends
+            close()
+
 
 # ================================================================= async
-class AsyncOrchestrator:
+class AsyncOrchestrator(BackendCloseMixin):
     """The paper's architecture (Fig 2): N sampler threads + learner thread.
 
     Sampler i loop:  params <- PolicyStore (latest, maybe stale)
@@ -167,15 +181,32 @@ class AsyncOrchestrator:
     Learner loop:    drain >= min_batches experiences
                      params <- jitted PPO update
                      PolicyStore.publish(params)
+
+    Two sampler substrates: the in-process form above (threads + host
+    queues), and — pass ``pool=`` (an ``ipc.ProcessWorkerPool``) — true
+    worker *processes* collecting continuously into the shared-memory
+    trajectory ring while this process's learner drains it. In pool mode
+    the policy queue is the shared-memory ``ParamsChannel`` (one publish
+    per update, no pickling), backpressure is the ring itself (a worker
+    blocks once its slots are unconsumed — nothing is dropped), and
+    ``IterationLog`` additionally reports ``worker_utilization`` (rollout
+    time / worker loop wall time, cumulative).
     """
 
-    def __init__(self, rollout: Callable, learn: Optional[Callable],
-                 params: Any, opt_state: Any, carries: List[Any],
+    def __init__(self, rollout: Optional[Callable],
+                 learn: Optional[Callable],
+                 params: Any, opt_state: Any, carries: Optional[List[Any]],
                  num_samplers: int, min_batches_per_update: int = 1,
                  queue_size: int = 64, *,
                  train_step: Optional[Callable] = None,
-                 plane_state: Any = None):
-        self.rollout = jax.jit(rollout)
+                 plane_state: Any = None, pool=None):
+        self.pool = pool
+        if pool is None:
+            assert rollout is not None and carries is not None
+            self.rollout = jax.jit(rollout)
+        else:
+            self.rollout = None
+            num_samplers = pool.num_workers
         assert learn is not None or train_step is not None
         self.learn = jax.jit(learn) if learn is not None else None
         self._train_step = (jax.jit(train_step)
@@ -190,6 +221,11 @@ class AsyncOrchestrator:
         self.timer = PhaseTimer()
         self.logs: List[IterationLog] = []
         self._stop = threading.Event()
+        # pool mode: cumulative staleness / utilization accounting (the
+        # thread path keeps its history inside ExperienceQueue)
+        self._staleness: List[float] = []
+        self._collect_s = 0.0
+        self._loop_s = 0.0
 
     @property
     def buffer_state(self):
@@ -240,8 +276,65 @@ class AsyncOrchestrator:
                                     queue_drops=self.expq.drop_count))
             self.timer.add("collect_wait", wait)
 
+    # ------------------------------------------------- process-pool learner
+    def _learner_loop_pool(self, updates: int, deadline: float) -> None:
+        """Drain the shared-memory ring while worker processes free-run.
+        Returns early (like the thread path's learner join) once
+        ``deadline`` passes with workers alive but unproductive."""
+        it0 = len(self.logs)
+        for it in range(updates):
+            exps = []
+            t_wait0 = time.perf_counter()
+            while len(exps) < self.min_batches and not self._stop.is_set():
+                if time.monotonic() > deadline:
+                    return
+                got = self.pool.next_experience(timeout=1.0)
+                if got is None:
+                    continue
+                exp, loop_s = got
+                exps.append(exp)
+                self._collect_s += exp.collect_seconds
+                self._loop_s += loop_s
+                self._staleness.append(
+                    self.pool.version - exp.policy_version)
+            if self._stop.is_set() and not exps:
+                return
+            wait = time.perf_counter() - t_wait0
+            merged = merge_trajs(
+                [{k: jax.numpy.asarray(v) for k, v in e.traj.items()}
+                 for e in exps])
+            params, _ = self.store.read()
+            if self._train_step is not None:
+                (params, self.opt_state, self.plane_state, _,
+                 learn_time) = timed_train_step(
+                     self._train_step, params, self.opt_state,
+                     self.plane_state, merged)
+            else:
+                params, self.opt_state, _, learn_time = timed_learn(
+                    self.learn, params, self.opt_state, merged)
+            self.store.publish(params)
+            self.pool.publish(params)
+            util = (self._collect_s / self._loop_s
+                    if self._loop_s > 0 else 1.0)
+            record_log(self.logs, self.timer,
+                       assemble_log(it0 + it,
+                                    [e.collect_seconds for e in exps],
+                                    learn_time, merged,
+                                    staleness=(sum(self._staleness)
+                                               / len(self._staleness)),
+                                    worker_utilization=util))
+            self.timer.add("collect_wait", wait)
+
     # ---------------------------------------------------------------- run
     def run(self, updates: int, timeout: float = 600.0) -> List[IterationLog]:
+        if self.pool is not None:
+            # worker processes are the sampler concurrency; the learner
+            # runs right here (Ctrl-C propagates, experiment.run reaps);
+            # the timeout bounds a wedged-but-alive worker exactly like
+            # the thread path's learner join
+            self.pool.start_freerun()
+            self._learner_loop_pool(updates, time.monotonic() + timeout)
+            return self.logs
         samplers = [threading.Thread(target=self._sampler_loop, args=(i,),
                                      daemon=True)
                     for i in range(self.num_samplers)]
@@ -255,6 +348,12 @@ class AsyncOrchestrator:
         for t in samplers:
             t.join(timeout=5.0)
         return self.logs
+
+    def close(self) -> None:
+        """Stop sampler threads / reap worker processes (idempotent)."""
+        self._stop.set()
+        if self.pool is not None:
+            self.pool.close()
 
     @property
     def params(self):

@@ -15,6 +15,7 @@ Three granularities of "parallel sampler":
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Callable, Dict, Tuple
 
@@ -179,13 +180,80 @@ def make_lm_rollout(cfg, lmenv, gen_len: int) -> Callable:
     return rollout
 
 
+# ========================================================== the worker spec
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """Everything a fresh *process* needs to become one rollout worker.
+
+    Plain data only — registry names plus JSON-safe kwargs — so the spec
+    pickles across a ``spawn`` boundary and the worker rebuilds its env,
+    algorithm, jitted rollout and carry purely via the registry
+    (``build``); no closures, params or tracers ever cross. ``seed`` is
+    the *per-worker* seed (the parent passes ``schedule.seed + i``), so a
+    process worker's carry is bitwise the carry the inline backend would
+    have built for sampler ``i`` — the root of the ``process == inline``
+    determinism rule (DESIGN.md §6).
+    """
+    env: str
+    algo: str
+    horizon: int
+    batch: int                      # per-worker env batch
+    seed: int                       # per-worker: schedule.seed + worker_id
+    kernels: str = "auto"
+    env_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "WorkerSpec":
+        return cls(**d)
+
+    def build(self):
+        """Rebuild ``(rollout, carry, params_template)`` in this process.
+
+        ``rollout`` is the algorithm's unjitted rollout (callers jit it);
+        ``carry`` the worker's initial env carry; ``params_template`` a
+        freshly-initialized params pytree whose *structure* (not values)
+        lets the worker unflatten leaves read from a ``ParamsChannel``.
+        Sets the kernel-plane mode first so everything traced here sees
+        the spec's implementation choice.
+        """
+        from repro import kernels as kernels_mod
+        from repro import registry
+        kernels_mod.set_kernel_mode(self.kernels)
+        env = registry.make("env", self.env, **dict(self.env_kwargs))
+        algo = registry.make("algo", self.algo, **dict(self.algo_kwargs))
+        rollout = algo.make_rollout(env, self.horizon)
+        carry = init_env_carry(env, jax.random.PRNGKey(self.seed),
+                               self.batch)
+        params, _ = algo.init(jax.random.PRNGKey(self.seed), env)
+        return rollout, carry, params
+
+
 # ===================================================== sample-count helper
 def samples_per_rollout(batch: int, horizon: int) -> int:
     return batch * horizon
 
 
 def split_batch(global_batch: int, num_samplers: int) -> int:
-    """Per-sampler env batch (the paper divides 20000 samples across N)."""
-    assert global_batch % num_samplers == 0, (
-        f"global batch {global_batch} not divisible by N={num_samplers}")
+    """Per-sampler env batch (the paper divides 20000 samples across N).
+
+    Raises ``ValueError`` when the split is not exact — silently
+    truncating would collect fewer samples than the schedule promised.
+    """
+    if num_samplers < 1:
+        raise ValueError(f"num_samplers={num_samplers} must be >= 1")
+    if global_batch < 1:
+        raise ValueError(f"global_batch={global_batch} must be >= 1")
+    if global_batch % num_samplers != 0:
+        lower = (global_batch // num_samplers) * num_samplers
+        upper = lower + num_samplers
+        raise ValueError(
+            f"global_batch={global_batch} is not divisible by "
+            f"num_samplers={num_samplers}; every sampler must get an "
+            f"equal env batch — adjust global_batch (nearest multiples: "
+            + (f"{lower} or {upper}" if lower >= num_samplers
+               else f"{upper}") + ")")
     return global_batch // num_samplers

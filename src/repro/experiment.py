@@ -15,8 +15,15 @@ round-trip) and a checkpoint's metadata alone reproduces its run.
 (``repro.registry``) into a runner; ``run`` builds and drives it.
 ``launch/train.py``, ``examples/*`` and ``benchmarks/*`` all delegate
 here, which is what makes every algorithm (ppo/trpo/ddpg/sac) available
-on every backend (inline/threaded/sharded) and runtime (sync/async/fused)
-through one seam.
+on every backend (inline/threaded/sharded/process) and runtime
+(sync/async/fused) through one seam.
+
+The actor plane: ``backend="process"`` (optionally
+``schedule.num_workers``) collects with true worker *processes* — each
+rebuilt from a serializable ``WorkerSpec`` with its own XLA client,
+fed through shared-memory transport (``core/ipc.py``); with
+``runtime="async"`` the workers free-run into the shared trajectory
+ring while the learner drains it (DESIGN.md §6).
 
 The experience plane: ``buffer`` selects how collected experience is
 stored and re-sampled (``fifo`` trajectory pass-through for on-policy
@@ -61,6 +68,10 @@ class Schedule:
     seed: int = 0
     chunk: Optional[int] = None           # fused runtime: iters per dispatch
     min_batches_per_update: int = 1       # async runtime: learner drain size
+    num_workers: Optional[int] = None     # process backend: worker-process
+    #                                       count (None: num_samplers —
+    #                                       worker i matches sampler i, the
+    #                                       process == inline seed rule)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +80,7 @@ class ExperimentSpec:
     env: str = "pendulum"
     algo: str = "ppo"
     backend: str = "inline"               # inline | threaded | sharded
+    #                                       | process
     runtime: str = "sync"                 # sync | async | fused
     buffer: Optional[str] = None          # fifo | uniform | prioritized
     #                                       (None: the algo's default)
@@ -170,11 +182,13 @@ def build(spec: ExperimentSpec):
         raise ValueError(
             f"runtime 'fused' fuses collection into the train loop; "
             f"backend must be 'inline' (got {spec.backend!r})")
-    if spec.runtime == "async" and spec.backend != "threaded":
+    if spec.runtime == "async" and spec.backend not in ("threaded",
+                                                        "process"):
         raise ValueError(
-            f"runtime 'async' runs free-running sampler threads — its "
-            f"collection discipline is 'threaded'; set "
-            f"backend='threaded' (got {spec.backend!r})")
+            f"runtime 'async' runs free-running samplers — threads "
+            f"(backend='threaded') or worker processes collecting into "
+            f"the shared-memory ring (backend='process'); got "
+            f"{spec.backend!r}")
     env = registry.make("env", spec.env, **dict(spec.env_kwargs))
     algo = registry.make("algo", spec.algo,
                          **{**dict(spec.model), **dict(spec.algo_kwargs)})
@@ -211,30 +225,72 @@ def build(spec: ExperimentSpec):
                            rollout=rollout, train_step=train_step,
                            plane_state=plane_for([carry]))
 
-    per = sampler_mod.split_batch(sched.global_batch, sched.num_samplers)
+    # process backend: worker count may be named separately
+    # (schedule.num_workers); worker i inherits sampler i's seed, so the
+    # process backend is exactly inline with the same N (DESIGN.md §6)
+    n_samplers = sched.num_samplers
+    if spec.backend == "process":
+        n_samplers = sched.num_workers or sched.num_samplers
+    per = sampler_mod.split_batch(sched.global_batch, n_samplers)
     carries = [
         sampler_mod.init_env_carry(env, jax.random.PRNGKey(sched.seed + i),
                                    per)
-        for i in range(sched.num_samplers)
+        for i in range(n_samplers)
     ]
+    extra: Dict[str, Any] = {}
+    if spec.backend == "process":
+        worker_algo_kwargs = {**dict(spec.model), **dict(spec.algo_kwargs)}
+        extra = {
+            "params": params,
+            "worker_specs": [
+                sampler_mod.WorkerSpec(
+                    env=spec.env, algo=spec.algo, horizon=sched.horizon,
+                    batch=per, seed=sched.seed + i, kernels=spec.kernels,
+                    env_kwargs=dict(spec.env_kwargs),
+                    algo_kwargs=worker_algo_kwargs)
+                for i in range(n_samplers)
+            ],
+        }
     if spec.runtime == "async":
+        if spec.backend == "process":
+            from repro.core.backends import build_worker_pool
+            # 2 slots per worker: one being drained, one being filled —
+            # continuous collection without unbounded queueing
+            pool = build_worker_pool(rollout=rollout, carries=carries,
+                                     slots_per_worker=2, **extra)
+            return AsyncOrchestrator(
+                None, None, params, opt_state, None, n_samplers,
+                min_batches_per_update=sched.min_batches_per_update,
+                train_step=train_step, plane_state=plane_for(carries),
+                pool=pool)
         return AsyncOrchestrator(
             rollout, None, params, opt_state, carries,
-            sched.num_samplers,
+            n_samplers,
             min_batches_per_update=sched.min_batches_per_update,
             train_step=train_step, plane_state=plane_for(carries))
     backend = make_backend(spec.backend, rollout, carries,
                            env=env, horizon=sched.horizon,
                            step_keys=algo.step_keys,
-                           tail_keys=algo.tail_keys)
+                           tail_keys=algo.tail_keys, **extra)
     return SyncRunner(None, None, params, opt_state, backend=backend,
                       train_step=train_step, plane_state=plane_for(carries))
 
 
 def run(spec: ExperimentSpec,
         iterations: Optional[int] = None) -> ExperimentResult:
-    """The single entry point: build the spec's runner and drive it."""
+    """The single entry point: build the spec's runner and drive it.
+
+    The runner is closed in a ``finally`` — sampler threads, worker
+    processes and shared-memory blocks are released even when the run
+    raises or is interrupted (Ctrl-C reaps process workers). Results
+    (params, logs, buffer state) stay readable after close.
+    """
     runner = build(spec)
-    logs = runner.run(iterations if iterations is not None
-                      else spec.schedule.iterations)
+    try:
+        logs = runner.run(iterations if iterations is not None
+                          else spec.schedule.iterations)
+    finally:
+        close = getattr(runner, "close", None)
+        if close is not None:
+            close()
     return ExperimentResult(spec=spec, logs=logs, runner=runner)

@@ -18,7 +18,8 @@ reproducible from the checkpoint directory alone.
 Usage:
   PYTHONPATH=src python -m repro.launch.train --mode rl --env pendulum \
       --algo {ppo,trpo,ddpg,sac} --num-samplers 4 --iterations 20 \
-      --backend {inline,threaded,sharded,fused} \
+      --backend {inline,threaded,sharded,process,fused} \
+      [--num-workers 4]            # process backend: worker-process count \
       [--buffer prioritized --replay-capacity 100000 --n-step 3] \
       [--kernels {ref,pallas,auto}]   # kernel plane (DESIGN.md §5)
   PYTHONPATH=src python -m repro.launch.train --mode lm \
@@ -51,10 +52,12 @@ def spec_from_args(args) -> ExperimentSpec:
     runtime = ("async" if args.async_mode
                else "fused" if args.backend == "fused" else "sync")
     # normalize backend to what the runtime actually does, so checkpoint
-    # metadata never records a collection schedule that didn't run:
-    # fused has no host-visible backend; async is always sampler threads
+    # metadata never records a collection schedule that didn't run: fused
+    # has no host-visible backend; async samples with free-running threads
+    # unless process workers were requested explicitly
     backend = ("inline" if args.backend == "fused"
-               else "threaded" if args.async_mode else args.backend)
+               else "threaded" if args.async_mode
+               and args.backend != "process" else args.backend)
     # only forward --lr when the user set it, so each algorithm's own
     # learning-rate defaults (ppo 3e-4, trpo vf 1e-3, ddpg 1e-3) apply
     algo_kwargs = {} if args.lr is None else {"lr": args.lr}
@@ -82,6 +85,7 @@ def spec_from_args(args) -> ExperimentSpec:
             iterations=args.iterations,
             seed=args.seed,
             chunk=args.chunk,
+            num_workers=args.num_workers,
         ),
     )
 
@@ -142,6 +146,10 @@ def main() -> None:
                     choices=registry.choices("algo"))
     ap.add_argument("--arch", default="mixtral-8x7b-reduced")
     ap.add_argument("--num-samplers", type=int, default=4)
+    ap.add_argument("--num-workers", type=int, default=None,
+                    help="process backend: rollout worker-process count "
+                         "(default: --num-samplers; worker i reuses "
+                         "sampler i's seed, so process == inline exactly)")
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--horizon", type=int, default=128)
     ap.add_argument("--iterations", type=int, default=10)

@@ -60,6 +60,63 @@ def test_auto_reset_restarts_episode():
     assert int(state[2]) < 200
 
 
+def test_auto_reset_terminal_step_semantics():
+    """Pin the terminal-step contract of ``auto_reset`` directly (it was
+    previously only exercised through algo tests): on ``done`` the
+    *reset* observation replaces the terminal observation, the state
+    pytree swaps to the reset state leafwise, and the reward is still
+    the terminal transition's (never the reset's)."""
+    env = envs.make("pendulum", max_episode_steps=3)
+    step = auto_reset(env)
+    key = jax.random.PRNGKey(42)
+    state, obs = env.reset(key)
+    action = jnp.ones((env.act_dim,)) * 0.3
+    for i in range(3):
+        key, k = jax.random.split(key)
+        # replicate auto_reset's internal key split to predict the reset
+        k_step, k_reset = jax.random.split(k)
+        raw_state, raw_obs, raw_rew, raw_done = env.step(state, action,
+                                                         k_step)
+        reset_state, reset_obs = env.reset(k_reset)
+        state, obs, rew, done = step(state, action, k)
+        assert bool(done) == (i == 2)          # 3-step episodes
+        np.testing.assert_array_equal(np.asarray(rew), np.asarray(raw_rew))
+        if bool(done):
+            # reset obs replaces the terminal obs...
+            np.testing.assert_array_equal(np.asarray(obs),
+                                          np.asarray(reset_obs))
+            assert float(jnp.max(jnp.abs(obs - raw_obs))) > 0
+            # ...and every state leaf swaps to the reset state's
+            for got, want in zip(jax.tree.leaves(state),
+                                 jax.tree.leaves(reset_state)):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+        else:
+            np.testing.assert_array_equal(np.asarray(obs),
+                                          np.asarray(raw_obs))
+            for got, want in zip(jax.tree.leaves(state),
+                                 jax.tree.leaves(raw_state)):
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+
+
+def test_auto_reset_step_counter_leaf_swaps():
+    """The step-counter leaf (state[2] on pendulum) is part of the state
+    pytree swap: it returns to the reset value (0) after a terminal step
+    instead of keeping counting."""
+    env = envs.make("pendulum", max_episode_steps=2)
+    step = auto_reset(env)
+    state, _ = env.reset(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    counters = []
+    for _ in range(5):
+        key, k = jax.random.split(key)
+        state, _, _, done = step(state, jnp.zeros((1,)), k)
+        counters.append(int(state[2]))
+    # counter pattern for 2-step episodes under auto-reset: 1, 0, 1, 0, 1
+    assert counters == [1, 0, 1, 0, 1]
+
+
 def test_rollout_traj_layout_and_merge(rng_key):
     env = envs.make("pendulum")
     from repro.models import mlp_policy
