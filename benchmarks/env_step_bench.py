@@ -1,0 +1,103 @@
+"""The env-plane row: device-resident env stepping throughput.
+
+Two measurements per revision (DESIGN.md §7):
+
+* ``env_step_{ref,pallas}_<env>_B<B>`` — the fused step+auto-reset
+  kernel against its batched reference at B ∈ {1k, 10k, 100k}
+  (``steps_per_sec``). Off-accelerator the pallas rows run the
+  *interpreter* — they time the correctness harness, not the kernel;
+  the compiled rows on TPU/GPU are the real measurement. The ref rows
+  double as the XLA fusion baseline the kernels have to beat there.
+* ``env_step_vector_B<B>`` vs ``env_step_inline_N1`` — collection
+  throughput (``samples_per_sec``) of one jitted rollout over a
+  VectorEnv batch of B instances against the legacy inline N=1
+  sampler at its paper configuration (global_batch=4). This is the
+  claim the env plane rests on: one batched state pytree stepped in
+  place beats host-orchestrated small-batch collection by orders of
+  magnitude once B reaches ~10k.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+
+from benchmarks.common import emit, timed
+
+BS: Tuple[int, ...] = (1_000, 10_000, 100_000)
+ENV_PARAMS = {
+    "pendulum": dict(max_torque=2.0),
+    "cartpole": dict(force_max=10.0),
+    "cheetah": dict(ctrl_cost=0.1),
+}
+
+
+def _kernel_inputs(name: str, B: int):
+    from repro import envs
+    env = envs.make(name, max_episode_steps=3)
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    states, _ = jax.vmap(env.reset)(jax.random.split(ks[0], B))
+    actions = jax.random.uniform(ks[1], (B, env.act_dim),
+                                 minval=-1.0, maxval=1.0)
+    rs, ro = jax.vmap(env.reset)(jax.random.split(ks[2], B))
+    params = dict(max_episode_steps=3, reward_scale=1.0, **ENV_PARAMS[name])
+    return states, actions, rs, ro, params
+
+
+def bench_kernels(bs: Sequence[int] = BS,
+                  env_names: Sequence[str] = tuple(ENV_PARAMS)) -> None:
+    from repro.kernels.env_step import ops as env_ops
+    for name in env_names:
+        for B in bs:
+            states, actions, rs, ro, params = _kernel_inputs(name, B)
+            for impl in ("ref", "pallas"):
+                step = jax.jit(partial(env_ops.env_step, name, impl=impl,
+                                       **params))
+                dt = timed(step, states, actions, rs, ro)
+                emit(f"env_step_{impl}_{name}_B{B}", dt * 1e6,
+                     f"steps_per_sec={B / dt:.0f} B={B}")
+
+
+def _rollout_throughput(env, batch: int, horizon: int, seed: int = 5) -> float:
+    """samples/sec of one jitted ``make_env_rollout`` dispatch."""
+    from repro.core import sampler as sampler_mod
+    from repro.models import mlp_policy
+    params = mlp_policy.init_policy(jax.random.PRNGKey(seed), env.obs_dim,
+                                    env.act_dim, hidden=64)
+    carry = sampler_mod.init_env_carry(env, jax.random.PRNGKey(seed + 1),
+                                       batch)
+    rollout = jax.jit(sampler_mod.make_env_rollout(env, horizon))
+    dt = timed(rollout, params, carry)
+    return batch * horizon / dt
+
+
+def bench_vector_rollout(bs: Sequence[int] = BS, horizon: int = 4,
+                         env_name: str = "pendulum") -> None:
+    from repro import envs
+    from repro.envs.vector import VectorEnv
+    env = envs.make(env_name)
+    # the legacy serial baseline: N=1 inline sampler, global_batch=4
+    # (the actor-plane configuration the paper measures against)
+    base = _rollout_throughput(env, 4, 512)
+    emit("env_step_inline_N1", 4 * 512 / base * 1e6,
+         f"samples_per_sec={base:.0f} batch=4")
+    for B in bs:
+        sps = _rollout_throughput(VectorEnv(env, B), B, horizon)
+        emit(f"env_step_vector_B{B}", B * horizon / sps * 1e6,
+             f"samples_per_sec={sps:.0f} B={B} speedup_vs_inline="
+             f"{sps / base:.1f}")
+
+
+def run_all(bs: Sequence[int] = BS) -> None:
+    bench_kernels(bs)
+    bench_vector_rollout(bs)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bs", default=",".join(map(str, BS)))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_all(tuple(int(b) for b in args.bs.split(",")))

@@ -11,7 +11,11 @@ of evaporating into stdout. Sections:
   replay      experience-plane adds/sec + samples/sec per buffer kind
               (including kernel-plane ref/pallas rows for prioritized)
   sampler     actor-plane scaling: samples/sec vs N per backend
-              (inline vs threaded vs true worker processes) [DESIGN.md §6]
+              (inline vs threaded vs true worker processes), plus the
+              vector-collection row at env_batch=B     [DESIGN.md §6]
+  env_step    env-plane: fused step+auto-reset kernels ref-vs-pallas at
+              B in {1k,10k,100k} + VectorEnv rollout throughput vs the
+              inline N=1 baseline                      [DESIGN.md §7]
   kernels_lm  attn_* / selective_scan_* / decode_step_* sampler benches
   kernels_rl  gae / sum_tree / replay_ring ref-vs-pallas  [DESIGN.md §5]
   roofline    three-term roofline per (arch x shape x mesh)
@@ -35,13 +39,14 @@ import time
 
 
 def _sections():
-    from benchmarks import fig_parallel, fused_vs_stepped, kernel_bench, \
-        replay_bench, roofline, sampler_scaling
+    from benchmarks import env_step_bench, fig_parallel, fused_vs_stepped, \
+        kernel_bench, replay_bench, roofline, sampler_scaling
     return {
         "fig": fig_parallel.run_all,
         "fused": fused_vs_stepped.run_all,
         "replay": replay_bench.run_all,
         "sampler": sampler_scaling.run_all,
+        "env_step": env_step_bench.run_all,
         "kernels_lm": kernel_bench.run_lm,
         "kernels_rl": kernel_bench.run_rl,
         "roofline": roofline.main,

@@ -55,9 +55,42 @@ def sweep(backend: str, ns: Sequence[int] = NS, budget: int = 2048,
     return out
 
 
+def sweep_vector(bs: Sequence[int] = (1024, 4096), iterations: int = 6,
+                 repeats: int = 2,
+                 env_name: str = "pendulum") -> Dict[int, float]:
+    """The env-plane row alongside the backend sweep: one device-resident
+    VectorEnv batch of B instances (``schedule.env_batch``, no sampler
+    split) measured on the same collect critical path. The full B sweep
+    up to 100k lives in ``benchmarks/env_step_bench.py``."""
+    from repro.experiment import ExperimentSpec, Schedule
+
+    from repro import experiment
+    out = {}
+    for b in bs:
+        best = 0.0
+        for _ in range(repeats):
+            spec = ExperimentSpec(
+                env=env_name, algo="ppo", backend="inline",
+                model={"hidden": 64},
+                schedule=Schedule(horizon=2, seed=3, env_batch=b))
+            runner = experiment.build(spec)
+            try:
+                logs = runner.run(iterations)
+            finally:
+                runner.close()
+            critical = min(log.collect_time for log in logs[1:])
+            best = max(best, logs[1].samples / critical)
+        out[b] = best
+        emit(f"sampler_vector_B{b}", logs[1].samples / best * 1e6,
+             f"samples_per_sec={best:.0f} env_batch={b}")
+    return out
+
+
 def run_all(ns: Sequence[int] = NS,
             backends: Sequence[str] = BACKENDS) -> Dict[str, Dict[int, float]]:
-    return {backend: sweep(backend, ns=ns) for backend in backends}
+    out = {backend: sweep(backend, ns=ns) for backend in backends}
+    out["vector"] = sweep_vector()
+    return out
 
 
 if __name__ == "__main__":

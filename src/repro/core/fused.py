@@ -10,6 +10,12 @@ buffers, so the whole collect->learn loop stays resident on the device and
 the host pays one dispatch per chunk instead of ~2N per iteration
 (DESIGN.md §2).
 
+With vector collection (``schedule.env_batch`` — the env plane,
+DESIGN.md §7) the rollout inside the scan steps a device-resident
+``VectorEnv`` batch through the fused ``env_step`` kernels, so env
+stepping included, a whole collect->GAE->learn iteration is one donated
+dispatch.
+
 ``make_fused_train_loop`` builds the raw jitted chunk function;
 ``FusedRunner`` wraps it in the runner interface (``run`` ->
 ``IterationLog`` list) so launch/examples/benchmarks treat it like any

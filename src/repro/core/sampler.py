@@ -32,6 +32,29 @@ def batched_reset(env: Env, key, batch: int):
     return states, obs
 
 
+def batched_step(env: Env) -> Callable:
+    """Batched step+auto-reset: ``step(state, actions, keys)`` over
+    ``(B,)``-leading leaves.
+
+    A ``VectorEnv`` supplies its fused fast-path (``batched_step``
+    attribute — one kernel dispatch for the whole batch); a plain ``Env``
+    gets the historical ``vmap(auto_reset(env))``, byte-for-byte the
+    rollout bodies' previous inline expression. The two are
+    bitwise-identical for matched keys (``tests/test_vector_env.py``), so
+    which one a rollout traces is a scheduling choice, not a numerical
+    one.
+    """
+    fast = getattr(env, "batched_step", None)
+    if fast is not None:
+        return fast
+    step_fn = auto_reset(env)
+
+    def step(state, actions, keys):
+        return jax.vmap(step_fn)(state, actions, keys)
+
+    return step
+
+
 def make_env_rollout(env: Env, horizon: int) -> Callable:
     """Build ``rollout(params, carry, step_keys) -> (carry', traj)``.
 
@@ -39,7 +62,7 @@ def make_env_rollout(env: Env, horizon: int) -> Callable:
     traj arrays are time-major ``(T, B, ...)``; includes ``last_value``.
     Pure and jit/shard_map-compatible.
     """
-    step_fn = auto_reset(env)
+    step_batch = batched_step(env)
 
     def rollout(params, carry, _unused=None):
         def body(carry, _):
@@ -50,7 +73,7 @@ def make_env_rollout(env: Env, horizon: int) -> Callable:
                 mlp_policy.sample_action, in_axes=(None, 0, 0))(
                     params, obs, ka)
             values = mlp_policy.value_apply(params, obs)
-            env_state2, obs2, rewards, dones = jax.vmap(step_fn)(
+            env_state2, obs2, rewards, dones = step_batch(
                 env_state, actions, ke)
             out = {"obs": obs, "actions": actions, "rewards": rewards,
                    "dones": dones, "logp": logp, "values": values}
@@ -81,7 +104,7 @@ def make_algo_rollout(algo, env: Env, horizon: int) -> Callable:
     bootstrap). Same carry/traj layout as ``make_env_rollout``, so every
     backend schedules it unchanged.
     """
-    step_fn = auto_reset(env)
+    step_batch = batched_step(env)
     needs_next_obs = bool(getattr(algo, "needs_next_obs", False))
 
     def rollout(params, carry, _unused=None):
@@ -91,7 +114,7 @@ def make_algo_rollout(algo, env: Env, horizon: int) -> Callable:
             keys2, ka, ke = splits[:, 0], splits[:, 1], splits[:, 2]
             actions, extras = jax.vmap(
                 algo.act, in_axes=(None, 0, 0))(params, obs, ka)
-            env_state2, obs2, rewards, dones = jax.vmap(step_fn)(
+            env_state2, obs2, rewards, dones = step_batch(
                 env_state, actions, ke)
             out = {"obs": obs, "actions": actions, "rewards": rewards,
                    "dones": dones, **extras}

@@ -1,6 +1,11 @@
 from repro import registry
 from repro.envs import cartpole, cheetah, lm_env, pendulum  # noqa: F401
-from repro.envs.base import Env, auto_reset  # noqa: F401
+from repro.envs.base import (  # noqa: F401
+    Env,
+    auto_reset,
+    auto_reset_batch,
+)
+from repro.envs.vector import VectorEnv  # noqa: F401
 
 registry.register("env", "pendulum", pendulum.make)
 registry.register("env", "cartpole", cartpole.make)

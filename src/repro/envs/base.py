@@ -3,13 +3,16 @@
 Environments are stateless pytree-in / pytree-out so they can be ``vmap``-ed
 into sampler batches and ``lax.scan``-ed into rollouts — the JAX-native
 equivalent of WALL-E's per-process environment copies. All functions operate
-on a *single* environment; batching is always applied from outside (vmap),
-so ``done`` is a scalar inside ``step``.
+on a *single* environment; batching is applied from outside, either by
+``vmap`` (``auto_reset``) or by the env's own batched fast-path
+(``auto_reset_batch`` — the device-resident ``VectorEnv`` plane, where
+B=1k–100k instances are one batched state pytree and the step+auto-reset
+runs as a fused kernel; see ``envs/vector.py`` and DESIGN.md §7).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +22,17 @@ EnvState = Any
 
 @dataclasses.dataclass(frozen=True)
 class Env:
-    """A bundle of pure functions describing one environment."""
+    """A bundle of pure functions describing one environment.
+
+    ``batch_step``, when provided, is the batched fused step+auto-reset
+    fast-path: ``(state, actions, keys, reset_state, reset_obs) ->
+    (state', obs, rewards, dones)`` over ``(B,)``-leading leaves, with
+    the auto-reset select already applied against the given reset
+    candidates. It dispatches through the ``env_step`` kernel family
+    (``kernels/env_step``), so ``--kernels pallas`` runs the whole env
+    step as one Pallas kernel. Envs without one fall back to
+    ``vmap(step)`` + a single batched ``where`` (``auto_reset_batch``).
+    """
     name: str
     obs_dim: int
     act_dim: int
@@ -27,6 +40,7 @@ class Env:
     step: Callable[[EnvState, jnp.ndarray, jax.Array],
                    Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray]]
     max_episode_steps: int = 1000
+    batch_step: Optional[Callable] = None
 
 
 def auto_reset(env: Env):
@@ -41,5 +55,52 @@ def auto_reset(env: Env):
                                   reset_state, next_state)
         obs = jnp.where(done, reset_obs, obs)
         return next_state, obs, reward, done
+
+    return step
+
+
+def select_reset_batch(done, reset_state, reset_obs, state, obs):
+    """Batched auto-reset select: one leafwise ``where`` over the whole
+    batch (``done (B,)`` broadcast up each leaf's trailing dims) instead
+    of a vmapped per-instance tree select. Bitwise-identical to
+    ``vmap`` of ``auto_reset``'s select (regression-tested)."""
+
+    def pick(r, n):
+        mask = done.reshape(done.shape + (1,) * (n.ndim - done.ndim))
+        return jnp.where(mask, r, n)
+
+    state = jax.tree.map(pick, reset_state, state)
+    obs = pick(reset_obs, obs)
+    return state, obs
+
+
+def auto_reset_batch(env: Env):
+    """Batched analog of ``auto_reset``: ``step(state, actions, keys) ->
+    (state', obs, rewards, dones)`` over ``(B,)``-leading leaves with
+    per-instance PRNG ``keys (B,)``.
+
+    The key split and reset draw mirror ``auto_reset`` exactly (vmapped,
+    so per-instance key chains are unchanged); the physics step + select
+    take the batched fast-path — the env's fused ``batch_step`` kernel
+    when it has one, else ``vmap(env.step)`` followed by a *single*
+    ``where`` over the batch. Either way the result is bitwise-identical
+    to ``vmap(auto_reset(env))`` for matched keys, so swapping a sampler
+    from the vmapped interface to this one is a scheduling change, not a
+    numerical one (the ``VectorEnv`` parity tests pin this).
+    """
+    batch_step = env.batch_step
+
+    def step(state, actions, keys):
+        splits = jax.vmap(jax.random.split)(keys)
+        k_step, k_reset = splits[:, 0], splits[:, 1]
+        reset_state, reset_obs = jax.vmap(env.reset)(k_reset)
+        if batch_step is not None:
+            return batch_step(state, actions, k_step, reset_state,
+                              reset_obs)
+        next_state, obs, rewards, dones = jax.vmap(env.step)(
+            state, actions, k_step)
+        next_state, obs = select_reset_batch(dones, reset_state, reset_obs,
+                                             next_state, obs)
+        return next_state, obs, rewards, dones
 
     return step

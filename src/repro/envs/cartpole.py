@@ -7,6 +7,11 @@ cost. Episodes end on pole fall, track exit, or ``max_episode_steps``.
 ``make`` takes per-env kwargs through the registry and follows the same
 dtype conventions as ``pendulum`` (float32 observations/rewards by
 default, explicit ``dtype`` override, int32 step counter, bool done).
+
+The step physics live in ``kernels/env_step/ref.py`` (moved verbatim);
+this module wires them into the ``Env`` bundle and builds the fused
+``batch_step`` the ``VectorEnv`` plane dispatches through
+``kernels/env_step/ops.py``.
 """
 from __future__ import annotations
 
@@ -14,25 +19,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs.base import Env
-
-GRAVITY = 9.8
-M_CART = 1.0
-M_POLE = 0.1
-L_POLE = 0.5          # half-length
-FORCE_MAX = 10.0
-DT = 0.02
-X_LIMIT = 2.4
-TH_LIMIT = 12 * jnp.pi / 180
+from repro.kernels.env_step import ops as env_step_ops
+from repro.kernels.env_step import ref as env_step_ref
+from repro.kernels.env_step.ref import (  # noqa: F401  (historical names)
+    CARTPOLE_DT as DT,
+    CARTPOLE_FORCE_MAX as FORCE_MAX,
+    CARTPOLE_GRAVITY as GRAVITY,
+    CARTPOLE_L_POLE as L_POLE,
+    CARTPOLE_M_CART as M_CART,
+    CARTPOLE_M_POLE as M_POLE,
+    CARTPOLE_TH_LIMIT as TH_LIMIT,
+    CARTPOLE_X_LIMIT as X_LIMIT,
+)
 
 
 def make(max_episode_steps: int = 500, reward_scale: float = 1.0,
          force_max: float = FORCE_MAX, dtype=jnp.float32) -> Env:
     dtype = jnp.dtype(dtype)
     reward_scale = float(reward_scale)
+    params = dict(max_episode_steps=max_episode_steps,
+                  reward_scale=reward_scale, force_max=force_max)
 
     def obs(state):
-        x, xdot, th, thdot, _ = state
-        return jnp.stack([x, xdot, th, thdot]).astype(dtype)
+        return env_step_ref.cartpole_obs(state, dtype)
 
     def reset(key):
         vals = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
@@ -42,28 +51,17 @@ def make(max_episode_steps: int = 500, reward_scale: float = 1.0,
 
     def step(state, action, key):
         del key
-        x, xdot, th, thdot, t = state
-        force = jnp.clip(action[0], -1.0, 1.0) * force_max
-        total_m = M_CART + M_POLE
-        pm_l = M_POLE * L_POLE
-        costh, sinth = jnp.cos(th), jnp.sin(th)
-        temp = (force + pm_l * thdot ** 2 * sinth) / total_m
-        th_acc = ((GRAVITY * sinth - costh * temp)
-                  / (L_POLE * (4.0 / 3.0 - M_POLE * costh ** 2 / total_m)))
-        x_acc = temp - pm_l * th_acc * costh / total_m
-        x = x + DT * xdot
-        xdot = xdot + DT * x_acc
-        th = th + DT * thdot
-        thdot = thdot + DT * th_acc
-        t = t + 1
-        state = (x, xdot, th, thdot, t)
-        fell = (jnp.abs(x) > X_LIMIT) | (jnp.abs(th) > TH_LIMIT)
-        done = fell | (t >= max_episode_steps)
-        reward = 1.0 - 0.01 * action[0] ** 2 - 1.0 * fell
-        if reward_scale != 1.0:
-            reward = reward * reward_scale
-        return state, obs(state), reward.astype(dtype), done
+        return env_step_ref.cartpole_step(state, action, dtype=dtype,
+                                          **params)
+
+    def batch_step(state, actions, keys, reset_state, reset_obs,
+                   impl=None):
+        del keys
+        return env_step_ops.env_step("cartpole", state, actions,
+                                     reset_state, reset_obs, dtype=dtype,
+                                     impl=impl, **params)
 
     return Env(name="cartpole", obs_dim=4, act_dim=1,
                reset=reset, step=step,
-               max_episode_steps=max_episode_steps)
+               max_episode_steps=max_episode_steps,
+               batch_step=batch_step)

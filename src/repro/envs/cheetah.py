@@ -13,6 +13,11 @@ pitch. Action: 6 joint torques in [-1, 1]. Reward: vx - 0.1 * ||a||^2.
 ``make`` takes per-env kwargs through the registry and follows the same
 dtype conventions as ``pendulum`` (float32 observations/rewards by
 default, explicit ``dtype`` override, int32 step counter, bool done).
+
+The step physics live in ``kernels/env_step/ref.py`` (moved verbatim);
+this module wires them into the ``Env`` bundle and builds the fused
+``batch_step`` the ``VectorEnv`` plane dispatches through
+``kernels/env_step/ops.py``.
 """
 from __future__ import annotations
 
@@ -20,24 +25,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs.base import Env
-
-N_JOINTS = 6
-DT = 0.05
-DAMPING = 1.5
-STIFFNESS = 4.0
-GEAR = 6.0
-COUPLING = 0.8
+from repro.kernels.env_step import ops as env_step_ops
+from repro.kernels.env_step import ref as env_step_ref
+from repro.kernels.env_step.ref import (  # noqa: F401  (historical names)
+    CHEETAH_COUPLING as COUPLING,
+    CHEETAH_DAMPING as DAMPING,
+    CHEETAH_DT as DT,
+    CHEETAH_GEAR as GEAR,
+    CHEETAH_N_JOINTS as N_JOINTS,
+    CHEETAH_STIFFNESS as STIFFNESS,
+)
 
 
 def make(max_episode_steps: int = 1000, reward_scale: float = 1.0,
          ctrl_cost: float = 0.1, dtype=jnp.float32) -> Env:
     dtype = jnp.dtype(dtype)
     reward_scale = float(reward_scale)
+    params = dict(max_episode_steps=max_episode_steps,
+                  reward_scale=reward_scale, ctrl_cost=ctrl_cost)
 
     def obs(state):
-        th, om, vx, pitch, _ = state
-        return jnp.concatenate(
-            [th, om, jnp.stack([vx, pitch])]).astype(dtype)
+        return env_step_ref.cheetah_obs(state, dtype)
 
     def reset(key):
         k1, k2 = jax.random.split(key)
@@ -49,24 +57,17 @@ def make(max_episode_steps: int = 1000, reward_scale: float = 1.0,
 
     def step(state, action, key):
         del key
-        th, om, vx, pitch, t = state
-        a = jnp.clip(action, -1.0, 1.0)
-        # joint dynamics: torque-driven damped oscillators, neighbour-coupled
-        neighbour = COUPLING * (jnp.roll(th, 1) - th)
-        om = om + DT * (GEAR * a - DAMPING * om - STIFFNESS * th + neighbour)
-        th = th + DT * om
-        # gait thrust: adjacent joints moving out of phase push the body
-        thrust = jnp.mean(jnp.sin(th[:-1] - th[1:]) * (om[:-1] - om[1:]))
-        vx = 0.9 * vx + DT * (8.0 * thrust)
-        pitch = 0.95 * pitch + 0.05 * jnp.mean(th)
-        t = t + 1
-        reward = vx - ctrl_cost * jnp.sum(a ** 2)
-        if reward_scale != 1.0:
-            reward = reward * reward_scale
-        done = t >= max_episode_steps
-        state = (th, om, vx, pitch, t)
-        return state, obs(state), reward.astype(dtype), done
+        return env_step_ref.cheetah_step(state, action, dtype=dtype,
+                                         **params)
+
+    def batch_step(state, actions, keys, reset_state, reset_obs,
+                   impl=None):
+        del keys
+        return env_step_ops.env_step("cheetah", state, actions,
+                                     reset_state, reset_obs, dtype=dtype,
+                                     impl=impl, **params)
 
     return Env(name="cheetah", obs_dim=2 * N_JOINTS + 2, act_dim=N_JOINTS,
                reset=reset, step=step,
-               max_episode_steps=max_episode_steps)
+               max_episode_steps=max_episode_steps,
+               batch_step=batch_step)

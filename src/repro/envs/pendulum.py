@@ -6,6 +6,12 @@ CPU stand-in for the paper's MuJoCo task in tests and examples.
 ``make`` accepts per-env kwargs (episode horizon, reward scale, dtype) —
 the registry seam passes ``ExperimentSpec.env_kwargs`` straight through.
 Defaults reproduce the historical constants bitwise.
+
+The step physics live in ``kernels/env_step/ref.py`` (moved verbatim, so
+the single-instance oracle and the batched/Pallas fast-paths share one
+set of expressions); this module wires them into the ``Env`` bundle and
+builds the fused ``batch_step`` the ``VectorEnv`` plane dispatches
+through ``kernels/env_step/ops.py``.
 """
 from __future__ import annotations
 
@@ -13,28 +19,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs.base import Env
+from repro.kernels.env_step import ops as env_step_ops
+from repro.kernels.env_step import ref as env_step_ref
+from repro.kernels.env_step.ref import (  # noqa: F401  (historical names)
+    PENDULUM_DT as DT,
+    PENDULUM_G as G,
+    PENDULUM_L as L,
+    PENDULUM_M as M,
+    PENDULUM_MAX_SPEED as MAX_SPEED,
+    PENDULUM_MAX_TORQUE as MAX_TORQUE,
+)
 
-MAX_SPEED = 8.0
-MAX_TORQUE = 2.0
-DT = 0.05
-G = 10.0
-M = 1.0
-L = 1.0
-
-
-def _angle_norm(x):
-    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+_angle_norm = env_step_ref._angle_norm
 
 
 def make(max_episode_steps: int = 200, reward_scale: float = 1.0,
          max_torque: float = MAX_TORQUE, dtype=jnp.float32) -> Env:
     dtype = jnp.dtype(dtype)
     reward_scale = float(reward_scale)
+    params = dict(max_episode_steps=max_episode_steps,
+                  reward_scale=reward_scale, max_torque=max_torque)
 
     def obs(state):
-        th, thdot, _ = state
-        return jnp.stack([jnp.cos(th), jnp.sin(th),
-                          thdot / MAX_SPEED]).astype(dtype)
+        return env_step_ref.pendulum_obs(state, dtype)
 
     def reset(key):
         k1, k2 = jax.random.split(key)
@@ -45,21 +52,17 @@ def make(max_episode_steps: int = 200, reward_scale: float = 1.0,
 
     def step(state, action, key):
         del key
-        th, thdot, t = state
-        u = jnp.clip(action[0], -max_torque, max_torque)
-        cost = _angle_norm(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
-        thdot = thdot + (3 * G / (2 * L) * jnp.sin(th)
-                         + 3.0 / (M * L ** 2) * u) * DT
-        thdot = jnp.clip(thdot, -MAX_SPEED, MAX_SPEED)
-        th = th + thdot * DT
-        t = t + 1
-        state = (th, thdot, t)
-        done = t >= max_episode_steps
-        reward = -cost
-        if reward_scale != 1.0:
-            reward = reward * reward_scale
-        return state, obs(state), reward.astype(dtype), done
+        return env_step_ref.pendulum_step(state, action, dtype=dtype,
+                                          **params)
+
+    def batch_step(state, actions, keys, reset_state, reset_obs,
+                   impl=None):
+        del keys
+        return env_step_ops.env_step("pendulum", state, actions,
+                                     reset_state, reset_obs, dtype=dtype,
+                                     impl=impl, **params)
 
     return Env(name="pendulum", obs_dim=3, act_dim=1,
                reset=reset, step=step,
-               max_episode_steps=max_episode_steps)
+               max_episode_steps=max_episode_steps,
+               batch_step=batch_step)

@@ -1,0 +1,62 @@
+"""Device-resident vectorised environments (the env plane, DESIGN.md §7).
+
+``VectorEnv`` presents B = 1k–100k instances of a single-instance ``Env``
+as *one* batched object: state is one pytree with ``(B,)``-leading leaves,
+stepping is one fused step+auto-reset over the whole batch, and each
+instance keeps its own PRNG chain. It replaces outside-in
+``vmap(auto_reset(env))`` as the sampler's env interface when
+``ExperimentSpec``/``train.py --env-batch`` selects vector collection —
+the fast-path dispatches through the ``env_step`` kernel family, so with
+``--kernels pallas`` the whole batched step runs as one Pallas kernel
+with state resident in VMEM.
+
+The batched step is bitwise-identical to ``vmap(auto_reset(env))`` for
+matched keys (pinned by ``tests/test_vector_env.py``), so vector
+collection at ``env_batch == global_batch`` reproduces the legacy
+single-sampler inline run exactly.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.envs.base import Env, auto_reset_batch
+
+
+class VectorEnv:
+    """B instances of ``env`` as one batched state pytree.
+
+    Duck-types the ``Env`` bundle (``name``/``obs_dim``/``act_dim``/
+    ``reset``/``step``/``max_episode_steps``), so registry consumers and
+    ``init_env_carry`` treat it as an env; samplers detect the extra
+    ``batched_step`` attribute and swap their per-instance ``vmap`` for
+    the fused batch path.
+    """
+
+    def __init__(self, env: Env, batch: int):
+        batch = int(batch)
+        if batch < 1:
+            raise ValueError(f"VectorEnv batch={batch} must be >= 1")
+        self.env = env
+        self.batch = batch
+        self.name = env.name
+        self.obs_dim = env.obs_dim
+        self.act_dim = env.act_dim
+        self.max_episode_steps = env.max_episode_steps
+        self.reset = env.reset          # single-instance (vmapped by carry init)
+        self.step = env.step            # single-instance (oracle/debug path)
+        self.batch_step = env.batch_step
+        # step(state, actions, keys) -> (state', obs, rewards, dones),
+        # auto-reset fused; all leaves (B,)-leading.
+        self.batched_step = auto_reset_batch(env)
+
+    def init_carry(self, key):
+        """Batched reset: ``(states, obs, keys)`` for ``self.batch``
+        instances — the rollout carry layout every sampler backend uses."""
+        k_reset, k_keys = jax.random.split(key)
+        states, obs = jax.vmap(self.env.reset)(
+            jax.random.split(k_reset, self.batch))
+        keys = jax.random.split(k_keys, self.batch)
+        return states, obs, keys
+
+    def __repr__(self):
+        return f"VectorEnv({self.name}, batch={self.batch})"

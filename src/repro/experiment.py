@@ -49,6 +49,7 @@ from repro.core import sampler as sampler_mod
 from repro.core.backends import make_backend, merge_trajs
 from repro.core.fused import FusedRunner
 from repro.core.orchestrator import AsyncOrchestrator, IterationLog, SyncRunner
+from repro.envs.vector import VectorEnv
 
 RUNTIMES = ("sync", "async", "fused")
 
@@ -72,6 +73,11 @@ class Schedule:
     #                                       count (None: num_samplers —
     #                                       worker i matches sampler i, the
     #                                       process == inline seed rule)
+    env_batch: Optional[int] = None       # vector collection: B env
+    #                                       instances as one device-resident
+    #                                       VectorEnv batch with one carry —
+    #                                       overrides the num_samplers ×
+    #                                       global_batch split (DESIGN.md §7)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,6 +196,22 @@ def build(spec: ExperimentSpec):
             f"the shared-memory ring (backend='process'); got "
             f"{spec.backend!r}")
     env = registry.make("env", spec.env, **dict(spec.env_kwargs))
+    sched = spec.schedule
+    vector = sched.env_batch is not None
+    if vector:
+        # vector collection: the whole batch is ONE device-resident
+        # VectorEnv — there is no per-sampler split to hand a process
+        # pool or a mesh, so backends built around that split are
+        # rejected rather than silently collecting a different shape
+        if spec.runtime != "fused" and spec.backend not in ("inline",
+                                                            "threaded"):
+            raise ValueError(
+                f"schedule.env_batch selects vector collection (one "
+                f"VectorEnv batch, a single carry); backend must be "
+                f"'inline' or 'threaded' (got {spec.backend!r} — "
+                f"'process'/'sharded' split the batch across samplers; "
+                f"use num_samplers × global_batch for those)")
+        env = VectorEnv(env, sched.env_batch)
     algo = registry.make("algo", spec.algo,
                          **{**dict(spec.model), **dict(spec.algo_kwargs)})
     buffer = _resolve_buffer(spec, algo)
@@ -203,7 +225,6 @@ def build(spec: ExperimentSpec):
     # that later spec's mode; drive runners before building the next spec
     # (``run`` does) when their ``kernels`` differ.
     kernels_mod.set_kernel_mode(spec.kernels)
-    sched = spec.schedule
     params, opt_state = algo.init(jax.random.PRNGKey(sched.seed), env)
     rollout = algo.make_rollout(env, sched.horizon)
     train_step = make_train_step(algo, buffer)
@@ -219,7 +240,8 @@ def build(spec: ExperimentSpec):
 
     if spec.runtime == "fused":
         carry = sampler_mod.init_env_carry(
-            env, jax.random.PRNGKey(sched.seed), sched.global_batch)
+            env, jax.random.PRNGKey(sched.seed),
+            sched.env_batch if vector else sched.global_batch)
         return FusedRunner(env, None, params, opt_state, carry,
                            horizon=sched.horizon, chunk=sched.chunk,
                            rollout=rollout, train_step=train_step,
@@ -231,7 +253,13 @@ def build(spec: ExperimentSpec):
     n_samplers = sched.num_samplers
     if spec.backend == "process":
         n_samplers = sched.num_workers or sched.num_samplers
-    per = sampler_mod.split_batch(sched.global_batch, n_samplers)
+    if vector:
+        # one carry holding the whole VectorEnv batch, seeded PRNGKey(seed)
+        # — exactly the carry inline num_samplers=1 / global_batch=B would
+        # build, so vector env_batch=B reproduces that run bitwise
+        n_samplers, per = 1, sched.env_batch
+    else:
+        per = sampler_mod.split_batch(sched.global_batch, n_samplers)
     carries = [
         sampler_mod.init_env_carry(env, jax.random.PRNGKey(sched.seed + i),
                                    per)

@@ -6,9 +6,9 @@ Two workload groups share one layout (``<name>_pallas``-style kernel +
 
 * LM sampler hot-spots — ``flash_attention``, ``decode_attention``,
   ``selective_scan`` (validated by allclose sweeps).
-* RL hot-loop families — ``gae``, ``sum_tree``, ``replay_ring``
-  (validated by *exact*-parity sweeps; the ref selection is the bitwise
-  baseline the rest of the suite is stated against).
+* RL hot-loop families — ``gae``, ``sum_tree``, ``replay_ring``,
+  ``env_step`` (validated by *exact*-parity sweeps; the ref selection is
+  the bitwise baseline the rest of the suite is stated against).
 
 The RL families are registered under the registry kind ``"kernel"``
 (``registry.make("kernel", "gae")`` returns the family's ops namespace;
@@ -22,6 +22,7 @@ from repro import registry
 from repro.kernels import select  # noqa: F401
 from repro.kernels import (  # noqa: F401
     decode_attention,
+    env_step,
     flash_attention,
     gae,
     replay_ring,
@@ -37,3 +38,4 @@ from repro.kernels.select import (  # noqa: F401
 registry.register("kernel", "gae", lambda: gae)
 registry.register("kernel", "sum_tree", lambda: sum_tree)
 registry.register("kernel", "replay_ring", lambda: replay_ring)
+registry.register("kernel", "env_step", lambda: env_step)

@@ -1,0 +1,2 @@
+from repro.kernels.env_step import env_step_pallas, ops, ref  # noqa: F401
+from repro.kernels.env_step.ops import ENV_NAMES, env_step  # noqa: F401

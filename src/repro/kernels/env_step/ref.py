@@ -1,0 +1,258 @@
+"""Pure-JAX oracles for the env-step kernel family.
+
+Two layers per environment, both stated against the historical
+``envs/{pendulum,cartpole,cheetah}.py`` physics:
+
+* ``<env>_step`` / ``<env>_obs`` — the *single-instance* step, moved
+  verbatim from the env modules (which now delegate here, so the
+  constants and expressions have exactly one home and every existing
+  bitwise guarantee — ``ppo`` × ``inline`` legacy identity, ``fused ==
+  stepped`` — is untouched).
+* ``<env>_step_batch_ref`` — the batched reference the Pallas kernels
+  are parity-tested against (exact int/bool + select + full
+  pendulum/cheetah trees; a few ulps on cartpole f32 arithmetic — the
+  XLA CPU fusion-context FMA bound, see ``env_step_pallas``): the same
+  expressions over ``(B,)``
+  state arrays, fused with the auto-reset select (one ``where`` over the
+  batch instead of a vmapped per-instance select). ``jax.vmap`` of the
+  single-instance step + ``auto_reset`` is bitwise-identical to this
+  path (tested in ``tests/test_vector_env.py``) — vmap batches the same
+  elementwise primitives this module writes out directly.
+
+The batched refs take the *reset candidates* as arguments: reset
+sampling needs ``jax.random`` (host-side key semantics the kernels do
+not reproduce), so ``envs.base.auto_reset_batch`` draws one batched
+reset outside and the fused step+select consumes it — on ``done`` the
+reset state/obs replace the stepped ones leafwise, the reward stays the
+terminal transition's (the ``auto_reset`` contract, DESIGN.md §6).
+
+This module imports only ``jax.numpy`` — the env modules import *it*,
+never the reverse, so the kernel plane stays import-cycle-free.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# ------------------------------------------------------------- constants
+# (moved verbatim from the env modules; DT collides across envs, so it is
+# env-prefixed here and re-exported under its historical name there)
+PENDULUM_MAX_SPEED = 8.0
+PENDULUM_MAX_TORQUE = 2.0
+PENDULUM_DT = 0.05
+PENDULUM_G = 10.0
+PENDULUM_M = 1.0
+PENDULUM_L = 1.0
+
+CARTPOLE_GRAVITY = 9.8
+CARTPOLE_M_CART = 1.0
+CARTPOLE_M_POLE = 0.1
+CARTPOLE_L_POLE = 0.5          # half-length
+CARTPOLE_FORCE_MAX = 10.0
+CARTPOLE_DT = 0.02
+CARTPOLE_X_LIMIT = 2.4
+CARTPOLE_TH_LIMIT = 12 * jnp.pi / 180
+
+CHEETAH_N_JOINTS = 6
+CHEETAH_DT = 0.05
+CHEETAH_DAMPING = 1.5
+CHEETAH_STIFFNESS = 4.0
+CHEETAH_GEAR = 6.0
+CHEETAH_COUPLING = 0.8
+
+
+def _angle_norm(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+def select_reset_batch(done, reset_state, reset_obs, state, obs):
+    """The batched auto-reset select: one leafwise ``where`` over the
+    whole batch (``done`` broadcast up each leaf's trailing dims) instead
+    of a vmapped per-instance tree select. Exact vmap parity."""
+    import jax
+
+    def pick(r, n):
+        mask = done.reshape(done.shape + (1,) * (n.ndim - done.ndim))
+        return jnp.where(mask, r, n)
+
+    state = jax.tree.map(pick, reset_state, state)
+    obs = pick(reset_obs, obs)
+    return state, obs
+
+
+# ================================================================ pendulum
+def pendulum_obs(state, dtype):
+    th, thdot, _ = state
+    return jnp.stack([jnp.cos(th), jnp.sin(th),
+                      thdot / PENDULUM_MAX_SPEED]).astype(dtype)
+
+
+def pendulum_step(state, action, *, max_episode_steps, reward_scale,
+                  max_torque, dtype):
+    """One pendulum physics step (single instance, moved verbatim)."""
+    th, thdot, t = state
+    u = jnp.clip(action[0], -max_torque, max_torque)
+    cost = _angle_norm(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
+    thdot = thdot + (3 * PENDULUM_G / (2 * PENDULUM_L) * jnp.sin(th)
+                     + 3.0 / (PENDULUM_M * PENDULUM_L ** 2) * u) * PENDULUM_DT
+    thdot = jnp.clip(thdot, -PENDULUM_MAX_SPEED, PENDULUM_MAX_SPEED)
+    th = th + thdot * PENDULUM_DT
+    t = t + 1
+    state = (th, thdot, t)
+    done = t >= max_episode_steps
+    reward = -cost
+    if reward_scale != 1.0:
+        reward = reward * reward_scale
+    return state, pendulum_obs(state, dtype), reward.astype(dtype), done
+
+
+def pendulum_step_batch_ref(state, actions, reset_state, reset_obs, *,
+                            max_episode_steps, reward_scale, max_torque,
+                            dtype):
+    """Batched pendulum step + fused auto-reset. state leaves (B,)/(B,),
+    int32 (B,); actions (B, 1)."""
+    th, thdot, t = state
+    u = jnp.clip(actions[:, 0], -max_torque, max_torque)
+    cost = _angle_norm(th) ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
+    thdot = thdot + (3 * PENDULUM_G / (2 * PENDULUM_L) * jnp.sin(th)
+                     + 3.0 / (PENDULUM_M * PENDULUM_L ** 2) * u) * PENDULUM_DT
+    thdot = jnp.clip(thdot, -PENDULUM_MAX_SPEED, PENDULUM_MAX_SPEED)
+    th = th + thdot * PENDULUM_DT
+    t = t + 1
+    done = t >= max_episode_steps
+    reward = -cost
+    if reward_scale != 1.0:
+        reward = reward * reward_scale
+    obs = jnp.stack([jnp.cos(th), jnp.sin(th),
+                     thdot / PENDULUM_MAX_SPEED], axis=-1).astype(dtype)
+    state, obs = select_reset_batch(done, reset_state, reset_obs,
+                                    (th, thdot, t), obs)
+    return state, obs, reward.astype(dtype), done
+
+
+# ================================================================ cartpole
+def cartpole_obs(state, dtype):
+    x, xdot, th, thdot, _ = state
+    return jnp.stack([x, xdot, th, thdot]).astype(dtype)
+
+
+def cartpole_step(state, action, *, max_episode_steps, reward_scale,
+                  force_max, dtype):
+    """One cart-pole physics step (single instance, moved verbatim)."""
+    x, xdot, th, thdot, t = state
+    force = jnp.clip(action[0], -1.0, 1.0) * force_max
+    total_m = CARTPOLE_M_CART + CARTPOLE_M_POLE
+    pm_l = CARTPOLE_M_POLE * CARTPOLE_L_POLE
+    costh, sinth = jnp.cos(th), jnp.sin(th)
+    temp = (force + pm_l * thdot ** 2 * sinth) / total_m
+    th_acc = ((CARTPOLE_GRAVITY * sinth - costh * temp)
+              / (CARTPOLE_L_POLE
+                 * (4.0 / 3.0 - CARTPOLE_M_POLE * costh ** 2 / total_m)))
+    x_acc = temp - pm_l * th_acc * costh / total_m
+    x = x + CARTPOLE_DT * xdot
+    xdot = xdot + CARTPOLE_DT * x_acc
+    th = th + CARTPOLE_DT * thdot
+    thdot = thdot + CARTPOLE_DT * th_acc
+    t = t + 1
+    state = (x, xdot, th, thdot, t)
+    fell = (jnp.abs(x) > CARTPOLE_X_LIMIT) | (jnp.abs(th) > CARTPOLE_TH_LIMIT)
+    done = fell | (t >= max_episode_steps)
+    reward = 1.0 - 0.01 * action[0] ** 2 - 1.0 * fell
+    if reward_scale != 1.0:
+        reward = reward * reward_scale
+    return state, cartpole_obs(state, dtype), reward.astype(dtype), done
+
+
+def cartpole_step_batch_ref(state, actions, reset_state, reset_obs, *,
+                            max_episode_steps, reward_scale, force_max,
+                            dtype):
+    """Batched cart-pole step + fused auto-reset. state leaves (B,)."""
+    x, xdot, th, thdot, t = state
+    a0 = actions[:, 0]
+    force = jnp.clip(a0, -1.0, 1.0) * force_max
+    total_m = CARTPOLE_M_CART + CARTPOLE_M_POLE
+    pm_l = CARTPOLE_M_POLE * CARTPOLE_L_POLE
+    costh, sinth = jnp.cos(th), jnp.sin(th)
+    temp = (force + pm_l * thdot ** 2 * sinth) / total_m
+    th_acc = ((CARTPOLE_GRAVITY * sinth - costh * temp)
+              / (CARTPOLE_L_POLE
+                 * (4.0 / 3.0 - CARTPOLE_M_POLE * costh ** 2 / total_m)))
+    x_acc = temp - pm_l * th_acc * costh / total_m
+    x = x + CARTPOLE_DT * xdot
+    xdot = xdot + CARTPOLE_DT * x_acc
+    th = th + CARTPOLE_DT * thdot
+    thdot = thdot + CARTPOLE_DT * th_acc
+    t = t + 1
+    fell = (jnp.abs(x) > CARTPOLE_X_LIMIT) | (jnp.abs(th) > CARTPOLE_TH_LIMIT)
+    done = fell | (t >= max_episode_steps)
+    reward = 1.0 - 0.01 * a0 ** 2 - 1.0 * fell
+    if reward_scale != 1.0:
+        reward = reward * reward_scale
+    obs = jnp.stack([x, xdot, th, thdot], axis=-1).astype(dtype)
+    state, obs = select_reset_batch(done, reset_state, reset_obs,
+                                    (x, xdot, th, thdot, t), obs)
+    return state, obs, reward.astype(dtype), done
+
+
+# ================================================================= cheetah
+def cheetah_obs(state, dtype):
+    th, om, vx, pitch, _ = state
+    return jnp.concatenate(
+        [th, om, jnp.stack([vx, pitch])]).astype(dtype)
+
+
+def cheetah_step(state, action, *, max_episode_steps, reward_scale,
+                 ctrl_cost, dtype):
+    """One cheetah physics step (single instance, moved verbatim)."""
+    th, om, vx, pitch, t = state
+    a = jnp.clip(action, -1.0, 1.0)
+    # joint dynamics: torque-driven damped oscillators, neighbour-coupled
+    neighbour = CHEETAH_COUPLING * (jnp.roll(th, 1) - th)
+    om = om + CHEETAH_DT * (CHEETAH_GEAR * a - CHEETAH_DAMPING * om
+                            - CHEETAH_STIFFNESS * th + neighbour)
+    th = th + CHEETAH_DT * om
+    # gait thrust: adjacent joints moving out of phase push the body
+    thrust = jnp.mean(jnp.sin(th[:-1] - th[1:]) * (om[:-1] - om[1:]))
+    vx = 0.9 * vx + CHEETAH_DT * (8.0 * thrust)
+    pitch = 0.95 * pitch + 0.05 * jnp.mean(th)
+    t = t + 1
+    reward = vx - ctrl_cost * jnp.sum(a ** 2)
+    if reward_scale != 1.0:
+        reward = reward * reward_scale
+    done = t >= max_episode_steps
+    state = (th, om, vx, pitch, t)
+    return state, cheetah_obs(state, dtype), reward.astype(dtype), done
+
+
+def cheetah_step_batch_ref(state, actions, reset_state, reset_obs, *,
+                           max_episode_steps, reward_scale, ctrl_cost,
+                           dtype):
+    """Batched cheetah step + fused auto-reset. th/om (B, 6), rest (B,)."""
+    th, om, vx, pitch, t = state
+    a = jnp.clip(actions, -1.0, 1.0)
+    neighbour = CHEETAH_COUPLING * (jnp.roll(th, 1, axis=-1) - th)
+    om = om + CHEETAH_DT * (CHEETAH_GEAR * a - CHEETAH_DAMPING * om
+                            - CHEETAH_STIFFNESS * th + neighbour)
+    th = th + CHEETAH_DT * om
+    thrust = jnp.mean(jnp.sin(th[:, :-1] - th[:, 1:])
+                      * (om[:, :-1] - om[:, 1:]), axis=-1)
+    vx = 0.9 * vx + CHEETAH_DT * (8.0 * thrust)
+    pitch = 0.95 * pitch + 0.05 * jnp.mean(th, axis=-1)
+    t = t + 1
+    reward = vx - ctrl_cost * jnp.sum(a ** 2, axis=-1)
+    if reward_scale != 1.0:
+        reward = reward * reward_scale
+    done = t >= max_episode_steps
+    obs = jnp.concatenate(
+        [th, om, jnp.stack([vx, pitch], axis=-1)], axis=-1).astype(dtype)
+    state, obs = select_reset_batch(done, reset_state, reset_obs,
+                                    (th, om, vx, pitch, t), obs)
+    return state, obs, reward.astype(dtype), done
+
+
+STEP_BATCH_REF = {
+    "pendulum": pendulum_step_batch_ref,
+    "cartpole": cartpole_step_batch_ref,
+    "cheetah": cheetah_step_batch_ref,
+}

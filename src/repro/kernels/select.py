@@ -1,19 +1,28 @@
 """Kernel-plane implementation selection: ``ref`` | ``pallas`` | ``auto``.
 
-Every RL hot-loop kernel family (``gae``, ``sum_tree``, ``replay_ring``)
-ships a pure-JAX reference and a Pallas kernel behind one ``ops.py``
-dispatcher. Which implementation a dispatcher traces is decided here:
+Every RL hot-loop kernel family (``gae``, ``sum_tree``, ``replay_ring``,
+``env_step``) ships a pure-JAX reference and a Pallas kernel behind one
+``ops.py`` dispatcher. Which implementation a dispatcher traces is
+decided here:
 
 * ``ref``    — always the pure-JAX oracle. The default resolution on
   CPU, and the implementation every bitwise guarantee in the test suite
   (``ppo`` × ``inline`` legacy identity, ``fused == stepped``) is stated
   against.
-* ``pallas`` — always the Pallas kernel. Off-TPU the kernel runs in
+* ``pallas`` — always the Pallas kernel. On an accelerator (TPU via
+  Mosaic, GPU via Triton) the kernel compiles; on CPU it runs in
   interpret mode (a correctness harness, not a timing one), so parity
   tests exercise the real kernel bodies on CPU CI.
-* ``auto``   — ``pallas`` compiled on TPU, ``ref`` everywhere else. The
-  default: experiments pick up the kernels exactly where they pay off
-  and stay on the oracle (and bitwise-stable) elsewhere.
+* ``auto``   — ``pallas`` compiled on TPU *and* GPU, ``ref`` on CPU.
+  The default: experiments pick up the kernels exactly where they pay
+  off and stay on the oracle (and bitwise-stable) elsewhere.
+
+The selection table (backend × mode -> implementation, interpret flag):
+
+    mode     cpu               tpu / gpu
+    ref      ref               ref
+    pallas   pallas+interpret  pallas compiled
+    auto     ref               pallas compiled
 
 The mode is process-global and read at **trace time**: dispatchers
 branch when a train step is traced, so already-jitted callables keep the
@@ -30,6 +39,11 @@ from typing import Optional, Tuple
 import jax
 
 MODES = ("ref", "pallas", "auto")
+
+# platforms where Pallas kernels compile to native code: TPU lowers via
+# Mosaic, GPU via Triton (jax reports "gpu" for CUDA/ROCm builds, but
+# accept the vendor spellings too)
+COMPILED_PLATFORMS = ("tpu", "gpu", "cuda", "rocm")
 
 _mode = "auto"
 
@@ -51,16 +65,17 @@ def resolve(impl: Optional[str] = None) -> Tuple[str, bool]:
     """Resolve a per-call override (or the global mode) to a concrete
     implementation: ``("ref", False)`` or ``("pallas", interpret)``.
 
-    ``interpret`` is True whenever the Pallas kernel would run off-TPU —
-    the interpreter executes the kernel body with real JAX ops, so the
-    result is exact but the timing is meaningless.
+    ``interpret`` is True whenever the Pallas kernel would run on a
+    platform with no native lowering (CPU) — the interpreter executes
+    the kernel body with real JAX ops, so the result is exact but the
+    timing is meaningless. On TPU and GPU the kernels compile.
     """
     mode = impl if impl is not None else _mode
     if mode not in MODES:
         raise ValueError(f"unknown kernel impl {mode!r}; choose from {MODES}")
-    on_tpu = jax.default_backend() == "tpu"
+    compiled = jax.default_backend() in COMPILED_PLATFORMS
     if mode == "auto":
-        mode = "pallas" if on_tpu else "ref"
+        mode = "pallas" if compiled else "ref"
     if mode == "ref":
         return "ref", False
-    return "pallas", not on_tpu
+    return "pallas", not compiled

@@ -20,6 +20,7 @@ Usage:
       --algo {ppo,trpo,ddpg,sac} --num-samplers 4 --iterations 20 \
       --backend {inline,threaded,sharded,process,fused} \
       [--num-workers 4]            # process backend: worker-process count \
+      [--env-batch 1024]           # env plane: B-instance VectorEnv batch \
       [--buffer prioritized --replay-capacity 100000 --n-step 3] \
       [--kernels {ref,pallas,auto}]   # kernel plane (DESIGN.md §5)
   PYTHONPATH=src python -m repro.launch.train --mode lm \
@@ -86,6 +87,7 @@ def spec_from_args(args) -> ExperimentSpec:
             seed=args.seed,
             chunk=args.chunk,
             num_workers=args.num_workers,
+            env_batch=args.env_batch,
         ),
     )
 
@@ -151,6 +153,13 @@ def main() -> None:
                          "(default: --num-samplers; worker i reuses "
                          "sampler i's seed, so process == inline exactly)")
     ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--env-batch", type=int, default=None,
+                    help="env plane: collect with one device-resident "
+                         "VectorEnv of B instances (one batched state "
+                         "pytree, fused step+auto-reset) instead of the "
+                         "num-samplers × global-batch split; combine "
+                         "with --backend fused --kernels pallas for "
+                         "single-dispatch iterations (DESIGN.md §7)")
     ap.add_argument("--horizon", type=int, default=128)
     ap.add_argument("--iterations", type=int, default=10)
     ap.add_argument("--steps", type=int, default=5)
@@ -167,10 +176,11 @@ def main() -> None:
     ap.add_argument("--kernels", default="auto",
                     choices=KERNEL_MODES,
                     help="kernel-plane implementation for the RL hot "
-                         "loop (gae/sum_tree/replay_ring): 'ref' pure-"
-                         "JAX oracles (bitwise baseline), 'pallas' the "
-                         "fused kernels (interpret mode off-TPU), "
-                         "'auto' pallas on TPU else ref")
+                         "loop (gae/sum_tree/replay_ring/env_step): "
+                         "'ref' pure-JAX oracles (bitwise baseline), "
+                         "'pallas' the fused kernels (interpret mode "
+                         "off-accelerator), 'auto' compiled pallas on "
+                         "TPU/GPU else ref")
     ap.add_argument("--buffer", default=None,
                     choices=registry.choices("buffer"),
                     help="experience buffer kind (default: the "

@@ -228,9 +228,10 @@ def test_kernel_mode_validation_and_resolution():
     assert select.resolve("ref") == ("ref", False)
     name, interpret = select.resolve("pallas")
     assert name == "pallas"
-    if jax.default_backend() != "tpu":
-        assert interpret  # off-TPU pallas always interprets
-        assert select.resolve("auto") == ("ref", False)
+    compiled = jax.default_backend() in select.COMPILED_PLATFORMS
+    assert interpret == (not compiled)  # off-accelerator pallas interprets
+    assert select.resolve("auto") == (("pallas", False) if compiled
+                                      else ("ref", False))
 
 
 def test_set_kernel_mode_returns_previous():
@@ -250,6 +251,6 @@ def test_spec_kernels_field_roundtrip_and_validation():
 
 def test_registry_kernel_kind_lists_families():
     names = registry.choices("kernel")
-    assert {"gae", "sum_tree", "replay_ring"} <= set(names)
+    assert {"gae", "sum_tree", "replay_ring", "env_step"} <= set(names)
     ops = registry.make("kernel", "gae")
     assert hasattr(ops, "gae") and hasattr(ops, "gae_ref")

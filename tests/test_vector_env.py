@@ -1,0 +1,152 @@
+"""The env plane's VectorEnv layer (DESIGN.md §7): batched auto-reset
+parity against vmapped single-instance semantics, per-instance RNG
+independence, spec wiring (``schedule.env_batch``), and the two bitwise
+train-level guarantees — vector collection reproduces legacy inline
+collection at matched B, and the fused runtime reproduces the stepped
+one with a VectorEnv carry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs, experiment
+from repro.core import sampler as sampler_mod
+from repro.envs.base import auto_reset
+from repro.envs.vector import VectorEnv
+from repro.experiment import ExperimentSpec, Schedule
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def _spec(algo="ppo", backend="inline", runtime="sync", **sched):
+    base = dict(num_samplers=1, global_batch=4, horizon=8, iterations=2,
+                seed=0)
+    return ExperimentSpec(env="pendulum", algo=algo, backend=backend,
+                          runtime=runtime, model={"hidden": 16},
+                          schedule=Schedule(**{**base, **sched}))
+
+
+# ============================================================ env layer
+@pytest.mark.parametrize("name", ["pendulum", "cartpole", "cheetah"])
+def test_vector_env_carry_shapes_and_step_parity(name):
+    """One batched state pytree, and ``batched_step`` bitwise equal to
+    ``vmap(auto_reset(env))`` across steps that include terminal resets."""
+    B = 13
+    env = envs.make(name, max_episode_steps=3)
+    venv = VectorEnv(env, B)
+    assert venv.batch == B and venv.name == env.name
+    assert venv.obs_dim == env.obs_dim and venv.act_dim == env.act_dim
+
+    states, obs, keys = venv.init_carry(KEY)
+    assert obs.shape == (B, env.obs_dim)
+    assert keys.shape[0] == B
+    for leaf in jax.tree.leaves(states):
+        assert leaf.shape[0] == B
+
+    actions = jax.random.uniform(jax.random.fold_in(KEY, 1),
+                                 (B, env.act_dim), minval=-1.0, maxval=1.0)
+    vm = jax.vmap(auto_reset(env))
+
+    def sweep(step):
+        @jax.jit
+        def run(s, k):
+            outs = []
+            for _ in range(5):  # crosses the max_episode_steps=3 horizon
+                s, o, r, d = step(s, actions, k)
+                outs.append((o, r, d))
+            return s, outs
+        return run(states, keys)
+
+    _assert_trees_equal(sweep(vm), sweep(venv.batched_step))
+
+
+def test_vector_env_rng_independence():
+    """Every instance carries its own key chain: with a horizon of 1 each
+    step resets every instance, and the B reset draws must all differ —
+    one shared key would collapse them to identical rows."""
+    B = 16
+    env = envs.make("pendulum", max_episode_steps=1)
+    venv = VectorEnv(env, B)
+    states, obs, keys = venv.init_carry(KEY)
+    # the initial reset already draws per-instance
+    assert len({tuple(r) for r in np.asarray(obs).tolist()}) == B
+    actions = jnp.zeros((B, env.act_dim))
+    _, obs2, _, done = jax.jit(venv.batched_step)(states, actions, keys)
+    assert bool(np.all(np.asarray(done)))
+    assert len({tuple(r) for r in np.asarray(obs2).tolist()}) == B
+
+
+def test_vector_env_rejects_bad_batch():
+    env = envs.make("pendulum")
+    with pytest.raises(ValueError, match="batch=0"):
+        VectorEnv(env, 0)
+
+
+# ============================================================ spec wiring
+def test_schedule_env_batch_roundtrips():
+    spec = _spec(env_batch=512)
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert spec.schedule.env_batch == 512
+    # default stays None (legacy split) and round-trips too
+    spec2 = _spec()
+    assert ExperimentSpec.from_dict(spec2.to_dict()).schedule.env_batch \
+        is None
+
+
+@pytest.mark.parametrize("backend", ["process", "sharded"])
+def test_env_batch_rejects_split_backends(backend):
+    with pytest.raises(ValueError, match="vector collection"):
+        experiment.build(_spec(backend=backend, env_batch=8))
+
+
+# ================================================= train-level guarantees
+def test_vector_collection_matches_legacy_inline_bitwise():
+    """ppo x inline at env_batch=B reproduces the legacy
+    num_samplers=1 / global_batch=B run bitwise: VectorEnv's fused
+    batched step is bitwise vmap-of-auto_reset, and the carry is seeded
+    identically (PRNGKey(seed), one sampler)."""
+    B = 6
+    legacy = experiment.run(_spec(num_samplers=1, global_batch=B))
+    vector = experiment.run(_spec(env_batch=B))
+    _assert_trees_equal(legacy.params, vector.params)
+    _assert_trees_equal(legacy.runner.opt_state, vector.runner.opt_state)
+    assert [log.samples for log in legacy.logs] == \
+        [log.samples for log in vector.logs]
+
+
+def test_fused_vector_matches_stepped_vector_bitwise():
+    """The one-dispatch iteration (runtime='fused') with a VectorEnv
+    carry reproduces the stepped sync runner at the same env_batch."""
+    B = 6
+    stepped = experiment.run(_spec(env_batch=B))
+    fused = experiment.run(_spec(env_batch=B, runtime="fused"))
+    _assert_trees_equal(stepped.params, fused.params)
+    _assert_trees_equal(stepped.runner.opt_state, fused.runner.opt_state)
+
+
+def test_fused_vector_large_batch_smoke():
+    """--env-batch 1024 --backend fused: one donated dispatch per chunk,
+    1024 x horizon samples per iteration."""
+    B, horizon, iters = 1024, 4, 2
+    res = experiment.run(_spec(env_batch=B, horizon=horizon,
+                               iterations=iters, runtime="fused"))
+    assert len(res.logs) == iters
+    assert all(log.samples == B * horizon for log in res.logs)
+    assert all(np.isfinite(log.mean_return) for log in res.logs)
+
+
+def test_vector_threaded_backend_allowed():
+    """'threaded' drives the single VectorEnv carry from a worker thread
+    (no batch split) — explicitly allowed by the spec check."""
+    B = 6
+    res = experiment.run(_spec(env_batch=B, backend="threaded"))
+    inline = experiment.run(_spec(env_batch=B))
+    _assert_trees_equal(inline.params, res.params)
