@@ -16,6 +16,9 @@ of evaporating into stdout. Sections:
   env_step    env-plane: fused step+auto-reset kernels ref-vs-pallas at
               B in {1k,10k,100k} + VectorEnv rollout throughput vs the
               inline N=1 baseline                      [DESIGN.md §7]
+  serving     serving plane: PolicyServer p50/p99 latency + requests/sec
+              vs batch-window deadline, and the hot-swap pickup latency
+                                                       [DESIGN.md §8]
   kernels_lm  attn_* / selective_scan_* / decode_step_* sampler benches
   kernels_rl  gae / sum_tree / replay_ring ref-vs-pallas  [DESIGN.md §5]
   roofline    three-term roofline per (arch x shape x mesh)
@@ -40,13 +43,14 @@ import time
 
 def _sections():
     from benchmarks import env_step_bench, fig_parallel, fused_vs_stepped, \
-        kernel_bench, replay_bench, roofline, sampler_scaling
+        kernel_bench, replay_bench, roofline, sampler_scaling, serving_bench
     return {
         "fig": fig_parallel.run_all,
         "fused": fused_vs_stepped.run_all,
         "replay": replay_bench.run_all,
         "sampler": sampler_scaling.run_all,
         "env_step": env_step_bench.run_all,
+        "serving": serving_bench.run_all,
         "kernels_lm": kernel_bench.run_lm,
         "kernels_rl": kernel_bench.run_rl,
         "roofline": roofline.main,

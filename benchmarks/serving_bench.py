@@ -1,0 +1,122 @@
+"""Serving-plane benchmark: p50/p99 latency and requests/sec vs the
+dynamic-batching window (DESIGN.md §8).
+
+One ``PolicyServer`` (ppo x pendulum MLP policy, built in-process — the
+bench measures the serving plane, not checkpoint IO) is swept over
+batch-window deadlines with a fixed concurrent client load. Short
+deadlines dispatch small partial batches (low latency, low occupancy);
+long deadlines fill the slots (high throughput per dispatch, queue-wait
+bounded by the window). Each row records the shared serving-stats
+schema into ``BENCH_<rev>.json`` via ``benchmarks.run`` section
+``serving``:
+
+    serving_ppo_pendulum_d<window>ms,<mean latency us>,
+        p50_ms=... p99_ms=... req_per_sec=... occupancy=... dispatches=...
+
+plus one ``serving_hot_swap`` row measuring the params-version pickup
+latency mid-traffic (publish -> first completion served by the new
+version).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+REQUESTS = 512
+CLIENTS = 16
+SLOTS = 16
+WINDOWS_MS = (1.0, 5.0, 20.0)
+
+
+def _build_policy():
+    import jax
+
+    from repro import registry
+    env = registry.make("env", "pendulum")
+    algo = registry.make("algo", "ppo")
+    params, _ = algo.init(jax.random.PRNGKey(0), env)
+    return env, algo, params
+
+
+def _fire(server, observations, clients: int, timeout: float = 120.0):
+    with concurrent.futures.ThreadPoolExecutor(clients) as pool:
+        futures = [pool.submit(server.act, obs, timeout=timeout)
+                   for obs in observations]
+        for fut in concurrent.futures.as_completed(futures):
+            fut.result()
+
+
+def sweep_window(env, algo, params) -> None:
+    from repro.serve import PolicyServer
+    rng = np.random.RandomState(0)
+    observations = rng.randn(REQUESTS, env.obs_dim).astype(np.float32)
+    for window_ms in WINDOWS_MS:
+        with PolicyServer(env, algo, params, slots=SLOTS,
+                          deadline_ms=window_ms,
+                          queue_cap=REQUESTS) as server:
+            _fire(server, observations, CLIENTS)
+            snap = server.snapshot()
+        lat = snap["latency_ms"]
+        emit(f"serving_ppo_pendulum_d{window_ms:g}ms",
+             lat["mean"] * 1e3,
+             f"p50_ms={lat['p50']:.3f} p99_ms={lat['p99']:.3f} "
+             f"req_per_sec={snap['requests_per_sec']:.0f} "
+             f"occupancy={snap['batch_occupancy']:.3f} "
+             f"dispatches={snap['dispatches']}")
+
+
+def hot_swap_latency(env, algo, params) -> None:
+    """Publish a new params version mid-traffic; report how long until a
+    completion is served by it (the replica-refresh latency)."""
+    import os
+    import uuid
+
+    import jax
+
+    from repro.core.ipc import ParamsChannel
+    from repro.serve import PolicyServer
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    channel = ParamsChannel.create(
+        leaves, f"walle-bench-{os.getpid()}-{uuid.uuid4().hex[:6]}")
+    channel.publish(leaves)
+    try:
+        with PolicyServer(env, algo, params, slots=SLOTS, deadline_ms=2.0,
+                          queue_cap=REQUESTS,
+                          params_channel=channel) as server:
+            rng = np.random.RandomState(1)
+            with concurrent.futures.ThreadPoolExecutor(CLIENTS) as pool:
+                futures = [
+                    pool.submit(server.act,
+                                rng.randn(env.obs_dim).astype(np.float32),
+                                timeout=120.0)
+                    for _ in range(REQUESTS)]
+                time.sleep(0.01)               # traffic in flight
+                t_publish = time.perf_counter()
+                channel.publish([x * 1.01 for x in leaves])
+                swap_seen = None
+                for fut in concurrent.futures.as_completed(futures):
+                    fut.result()
+                    if swap_seen is None and server.params_version >= 2:
+                        swap_seen = time.perf_counter() - t_publish
+            pickup_ms = (swap_seen if swap_seen is not None else -1) * 1e3
+            emit("serving_hot_swap", pickup_ms * 1e3,
+                 f"pickup_ms={pickup_ms:.3f} "
+                 f"final_version={server.params_version} "
+                 f"requests={server.stats.requests}")
+    finally:
+        channel.close(unlink=True)
+
+
+def run_all() -> None:
+    env, algo, params = _build_policy()
+    sweep_window(env, algo, params)
+    hot_swap_latency(env, algo, params)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run_all()

@@ -74,13 +74,32 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _resolve_step(directory: str, step: Optional[int]) -> int:
+    """Resolve (and validate) the step to load, with an error that names
+    the directory and what ``latest_step`` found — an absent or empty
+    checkpoint directory must fail here, loudly, not as an opaque
+    ``np.load``/``open`` failure deep in the restore."""
+    latest = latest_step(directory)
+    if step is None:
+        if latest is None:
+            raise FileNotFoundError(
+                f"no checkpoints under {directory!r} (latest_step() -> "
+                f"None: the directory "
+                f"{'exists but holds' if os.path.isdir(directory) else 'does not exist, so it holds'}"
+                f" no ckpt_<step> subdirectories) — check the path, or "
+                f"train with --ckpt-dir first")
+        return latest
+    if not os.path.isdir(os.path.join(directory, f"ckpt_{step:010d}")):
+        raise FileNotFoundError(
+            f"checkpoint step {step} not found under {directory!r} "
+            f"(latest_step() -> {latest})")
+    return step
+
+
 def restore(directory: str, template: Any, step: Optional[int] = None
             ) -> Any:
     """Load arrays into the structure of ``template`` (dtypes preserved)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = _resolve_step(directory, step)
     path = os.path.join(directory, f"ckpt_{step:010d}", "arrays.npz")
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -93,7 +112,6 @@ def restore(directory: str, template: Any, step: Optional[int] = None
 
 
 def load_metadata(directory: str, step: Optional[int] = None) -> Dict:
-    if step is None:
-        step = latest_step(directory)
+    step = _resolve_step(directory, step)
     with open(os.path.join(directory, f"ckpt_{step:010d}", "meta.json")) as f:
         return json.load(f)

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import atexit
 import dataclasses
+import json
 import os
 import queue as _queue
 import time
@@ -198,9 +199,30 @@ class ShmRing:
 
 @dataclasses.dataclass(frozen=True)
 class ChannelSpec:
-    """Attach info for a ``ParamsChannel`` (picklable)."""
+    """Attach info for a ``ParamsChannel`` (picklable).
+
+    Also JSON round-trippable (``to_json``/``from_json``): worker
+    processes receive the spec over the spawn boundary, but a *serving*
+    replica (``repro.serve``) may be launched independently of the
+    learner — the learner drops the spec as a handoff file and the
+    replica attaches from it (``launch/serve_policy.py
+    --channel-spec``).
+    """
     prefix: str
     leaves: Tuple[LeafSpec, ...]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "prefix": self.prefix,
+            "leaves": [dataclasses.asdict(l) for l in self.leaves],
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "ChannelSpec":
+        d = json.loads(text)
+        return cls(prefix=d["prefix"], leaves=tuple(
+            LeafSpec(key=l["key"], shape=tuple(l["shape"]),
+                     dtype=l["dtype"]) for l in d["leaves"]))
 
 
 class ParamsChannel:

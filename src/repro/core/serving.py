@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer
+from repro.serve.stats import ServingStats
 
 
 @dataclasses.dataclass
@@ -56,7 +57,10 @@ class SlotServer:
         self.eos_id = eos_id
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.completions: List[Completion] = []
-        self.wasted_slot_steps = 0      # EOS'd slots riding out the wave
+        # the shared serving-stats schema (serve/stats.py) — the same
+        # accounting the RL PolicyServer reports; wasted_slot_steps
+        # (EOS'd/padded slots riding out the wave) lives here now
+        self.stats = ServingStats(slots=slots)
         self.decode_steps = 0
         self._key = jax.random.PRNGKey(seed)
 
@@ -90,17 +94,20 @@ class SlotServer:
         done = [False] * len(wave)
         budget = min(self.budget, max(r.max_new_tokens for r in wave))
         for _ in range(budget):
+            # occupancy accounting: a slot emitting this step is occupied;
+            # already-EOS'd slots riding out the wave and the padded tail
+            # accrue wasted_slot_steps (a slot emitting its *final* token
+            # this step still counts as occupied)
+            self.stats.observe_batch(len(wave) - sum(done))
             host = [int(t) for t in tokens[:, 0]]
             for i, req in enumerate(wave):
                 if done[i]:
-                    self.wasted_slot_steps += 1
                     continue
                 emitted[i].append(host[i])
                 if (len(emitted[i]) >= req.max_new_tokens
                         or (self.eos_id is not None
                             and host[i] == self.eos_id)):
                     done[i] = True
-            self.wasted_slot_steps += pad
             if all(done):
                 break
             self._key, k = jax.random.split(self._key)
@@ -115,6 +122,21 @@ class SlotServer:
                 latency=now - start,
                 queue_wait=start - req.enqueue_time,
             ))
+            # shared-schema latency is end-to-end (enqueue -> done);
+            # Completion.latency stays wave-relative for compatibility
+            self.stats.observe(latency_s=now - req.enqueue_time,
+                               queue_wait_s=start - req.enqueue_time)
+
+    @property
+    def wasted_slot_steps(self) -> int:
+        """EOS'd/padded slot-steps — now kept by the shared stats."""
+        return self.stats.wasted_slot_steps
+
+    def snapshot(self) -> dict:
+        """The serving-stats schema shared with ``serve.PolicyServer``
+        (``serve/stats.py``) — p50/p99 latency, queue wait, batch
+        occupancy and the once-internal ``wasted_slot_steps``."""
+        return self.stats.snapshot()
 
     # -------------------------------------------------------------- run
     def run(self) -> List[Completion]:

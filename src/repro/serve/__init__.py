@@ -1,0 +1,16 @@
+"""The policy serving plane (DESIGN.md §8): train -> checkpoint -> serve.
+
+``PolicyServer`` micro-batches concurrent ``act(obs)`` requests into
+fixed-width single device dispatches under a latency deadline, loads any
+registered env x algo policy from a ``checkpoint/`` directory, and
+hot-swaps params live through the versioned ``core.ipc.ParamsChannel``
+a training run publishes to.
+"""
+from repro.serve.loader import PolicyHandle, load_policy  # noqa: F401
+from repro.serve.server import (  # noqa: F401
+    PendingAct,
+    PolicyServer,
+    ServerClosed,
+    ServerOverloaded,
+)
+from repro.serve.stats import ServingStats, percentile  # noqa: F401

@@ -1,0 +1,74 @@
+"""Checkpoint -> servable policy resolution (DESIGN.md §8).
+
+RL checkpoints record their fully-resolved ``ExperimentSpec`` in
+``meta.json`` (``launch/train.py``), so a checkpoint directory alone
+names everything a serving replica needs: the env (for ``obs_dim`` and
+the action contract), the algorithm (whose ``act()`` is the policy
+head), and the params structure (``algo.init`` builds the template the
+arrays restore into). ``load_policy`` performs that resolution through
+the same unified registry the trainer used — any env x algo that can
+train can serve, MLP control policies today, sequence policies when
+their ``act()`` lands on the Algorithm protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro import checkpoint, registry
+from repro.experiment import ExperimentSpec
+
+
+@dataclasses.dataclass
+class PolicyHandle:
+    """A restored, servable policy: env + algo + params + provenance."""
+    env: Any
+    algo: Any
+    params: Any
+    spec: ExperimentSpec
+    step: int
+    directory: str
+
+    @property
+    def name(self) -> str:
+        return f"{self.spec.algo}x{self.spec.env}@{self.step}"
+
+
+def load_policy(ckpt_dir: str, step: Optional[int] = None) -> PolicyHandle:
+    """Resolve ``ckpt_dir`` into a ``PolicyHandle``.
+
+    Raises ``FileNotFoundError`` (from ``checkpoint.restore``) when the
+    directory holds no checkpoints, and ``ValueError`` when the
+    checkpoint predates spec-recording metadata (lm-mode checkpoints
+    carry no env/algo identity and cannot resolve to a policy head).
+    """
+    meta = checkpoint.load_metadata(ckpt_dir, step)
+    spec_dict = meta.get("spec")
+    if spec_dict is None:
+        raise ValueError(
+            f"checkpoint {ckpt_dir!r} (step {meta.get('step')}) records no "
+            f"ExperimentSpec in its metadata (mode="
+            f"{meta.get('mode', 'unknown')!r}) — only rl-mode checkpoints "
+            f"written by launch/train.py are servable")
+    spec = ExperimentSpec.from_dict(spec_dict)
+    env = registry.make("env", spec.env, **dict(spec.env_kwargs))
+    algo = registry.make("algo", spec.algo,
+                         **{**dict(spec.model), **dict(spec.algo_kwargs)})
+    # template params: structure/dtypes are authoritative, values are
+    # overwritten by the restore — any seed builds the same structure
+    template, _ = algo.init(jax.random.PRNGKey(0), env)
+    params = checkpoint.restore(ckpt_dir, template, step)
+    return PolicyHandle(env=env, algo=algo, params=params, spec=spec,
+                        step=int(meta["step"]), directory=ckpt_dir)
+
+
+def policy_metadata(handle: PolicyHandle) -> Dict[str, Any]:
+    """JSON-safe provenance block servers attach to their stats."""
+    return {
+        "env": handle.spec.env,
+        "algo": handle.spec.algo,
+        "step": handle.step,
+        "directory": handle.directory,
+    }

@@ -1,0 +1,321 @@
+"""The policy serving plane: a dynamic-batching inference server with
+live params hot-swap (DESIGN.md §8).
+
+WALL-E decouples experience collection from learning with parallel
+queues; ``PolicyServer`` applies the same decoupling to *inference*.
+Concurrent ``act(obs)`` requests are admitted onto one bounded queue and
+micro-batched into single device dispatches by a dispatcher thread under
+a **latency deadline**: a batch launches when it fills (``slots``
+requests) OR when the oldest queued request has waited ``deadline_ms``.
+Batches are fixed-width and zero-padded, so request churn never
+recompiles — the one jitted executable is
+``vmap(algo.act)(params, obs[slots, obs_dim], keys[slots, 2])``, traced
+once at ``start()``.
+
+Determinism: a request's action depends only on its own row of the
+padded batch (row-parallel ops, per-row counter-based PRNG), so the
+serve path is bitwise-identical whether a request rides a full batch, a
+deadline-expired partial batch, or the single-request reference path —
+``tests/test_serve_plane.py`` pins this. Each request's PRNG key is
+derived from ``(seed, request_id)``, so a replay of the same request ids
+reproduces the same actions.
+
+Hot-swap: a server attached to a ``core.ipc.ParamsChannel`` polls the
+channel's version word between dispatches (one shared-memory read) and
+copies the new leaves only when the version moved — the exact mechanism
+that feeds rollout workers now feeds serving replicas, so a training
+run's ``publish`` reaches a live server mid-traffic with no dropped
+requests and no torn reads (the params pytree is swapped atomically
+between dispatches; every completion records the version that served
+it).
+
+Backpressure: the admission queue is bounded (``queue_cap``); a full
+queue rejects new work with ``ServerOverloaded`` at submit time instead
+of letting latency grow without bound. In-flight requests are never
+dropped — ``close()`` drains the queue before the dispatcher exits.
+"""
+from __future__ import annotations
+
+import itertools
+import queue as _queue
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ipc import ChannelSpec, ParamsChannel
+from repro.serve.stats import ServingStats
+
+
+class ServerClosed(RuntimeError):
+    """Submit after ``close()`` (or before ``start()``)."""
+
+
+class ServerOverloaded(RuntimeError):
+    """Admission queue full — backpressure; retry or raise capacity."""
+
+
+class PendingAct:
+    """A submitted request's completion handle (thread-safe future)."""
+
+    __slots__ = ("request_id", "obs", "key", "enqueue_s", "_event",
+                 "action", "params_version", "latency_s", "queue_wait_s")
+
+    def __init__(self, request_id: int, obs: np.ndarray, key: np.ndarray):
+        self.request_id = request_id
+        self.obs = obs
+        self.key = key
+        self.enqueue_s = time.perf_counter()
+        self._event = threading.Event()
+        self.action: Optional[np.ndarray] = None
+        self.params_version: Optional[int] = None
+        self.latency_s: Optional[float] = None
+        self.queue_wait_s: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not served within {timeout}s")
+        return self.action
+
+    def _complete(self, action: np.ndarray, version: int,
+                  dispatch_s: float, done_s: float) -> None:
+        self.action = action
+        self.params_version = version
+        self.queue_wait_s = dispatch_s - self.enqueue_s
+        self.latency_s = done_s - self.enqueue_s
+        self._event.set()
+
+
+class PolicyServer:
+    """Dynamic-batching ``act()`` server over any registered env x algo.
+
+    Parameters
+    ----------
+    env, algo, params : the policy — ``algo.act(params, obs, key)`` is
+        the head being served; ``params`` is both the initial weights and
+        the structure template hot-swapped leaves unflatten into.
+    slots : fixed device batch width (requests per dispatch).
+    deadline_ms : max time the *oldest* queued request waits before a
+        partial batch dispatches anyway — the latency/throughput knob.
+    queue_cap : admission bound (default ``16 * slots``); a full queue
+        raises ``ServerOverloaded``.
+    seed : per-request PRNG derivation base (key = ``(seed, request_id)``).
+    params_channel : a ``ParamsChannel`` (or its picklable
+        ``ChannelSpec`` to attach to) published by a live learner; the
+        server follows its version mid-traffic. A spec-attached channel
+        is closed with the server.
+    """
+
+    def __init__(self, env: Any, algo: Any, params: Any, *,
+                 slots: int = 8, deadline_ms: float = 5.0,
+                 queue_cap: Optional[int] = None, seed: int = 0,
+                 params_channel: Optional[Any] = None):
+        if slots < 1:
+            raise ValueError(f"slots={slots} must be >= 1")
+        if deadline_ms <= 0:
+            raise ValueError(f"deadline_ms={deadline_ms} must be > 0")
+        self.env = env
+        self.algo = algo
+        self.slots = int(slots)
+        self.deadline_s = float(deadline_ms) / 1e3
+        self.queue_cap = int(queue_cap) if queue_cap else 16 * self.slots
+        self.seed = int(seed)
+        self.stats = ServingStats(slots=self.slots)
+
+        leaves, self._treedef = jax.tree_util.tree_flatten(params)
+        self._params = params
+        self._channel: Optional[ParamsChannel] = None
+        self._own_channel = False
+        self.params_version = 0
+        if params_channel is not None:
+            if isinstance(params_channel, ChannelSpec):
+                self._channel = ParamsChannel.attach(params_channel)
+                self._own_channel = True
+            else:
+                self._channel = params_channel
+            if len(self._channel.spec.leaves) != len(leaves):
+                raise ValueError(
+                    f"params channel carries "
+                    f"{len(self._channel.spec.leaves)} leaves, the policy "
+                    f"has {len(leaves)} — channel and checkpoint disagree")
+
+        self._batched_act = jax.jit(
+            jax.vmap(self.algo.act, in_axes=(None, 0, 0)))
+        self._queue: "_queue.Queue[PendingAct]" = _queue.Queue(
+            maxsize=self.queue_cap)
+        self._ids = itertools.count()
+        self._stop = threading.Event()
+        self._started = False
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, step: Optional[int] = None,
+                        **kwargs) -> "PolicyServer":
+        """Build a server from a training checkpoint directory (the
+        ``launch/train.py --ckpt-dir`` output); see ``serve.loader``."""
+        from repro.serve.loader import load_policy
+        handle = load_policy(ckpt_dir, step)
+        return cls(handle.env, handle.algo, handle.params, **kwargs)
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self, warmup: bool = True) -> "PolicyServer":
+        """Spawn the dispatcher thread; ``warmup`` traces/compiles the
+        batched executable first so the first live request never pays
+        compile time against its deadline."""
+        if self._closed:
+            raise ServerClosed("server was closed; build a new one")
+        if self._started:
+            return self
+        if self._channel is not None:
+            self._poll_channel()          # serve the freshest published v
+        if warmup:
+            obs, keys = self._alloc_batch()
+            jax.block_until_ready(
+                self._batched_act(self._params, obs, keys))
+        self._started = True
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="policy-server", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop admission, drain every queued request, join, release."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+        elif not self._queue.empty():
+            self._serve_loop()      # never started: drain inline — the
+            #                         no-dropped-requests rule still holds
+        if self._own_channel and self._channel is not None:
+            self._channel.close()
+        self._channel = None
+
+    def __enter__(self) -> "PolicyServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, obs: Any, *, key: Optional[Any] = None) -> PendingAct:
+        """Enqueue one observation; returns its completion handle.
+
+        Admission is open from construction — requests submitted before
+        ``start()`` queue up and are served once the dispatcher runs.
+        Raises ``ServerOverloaded`` when the admission queue is full and
+        ``ServerClosed`` after ``close()``.
+        """
+        if self._closed:
+            raise ServerClosed("server is closed")
+        obs = np.asarray(obs, dtype=np.float32)
+        if obs.shape != (self.env.obs_dim,):
+            raise ValueError(
+                f"obs shape {obs.shape} != ({self.env.obs_dim},) for env "
+                f"{self.env.name!r}")
+        rid = next(self._ids)
+        if key is None:
+            # a threefry key is two uint32 words; (seed, request_id) gives
+            # every request its own deterministic, replayable stream
+            # without a host->device round-trip per submit
+            key = np.array([self.seed, rid], dtype=np.uint32)
+        else:
+            key = np.asarray(key, dtype=np.uint32).reshape(2)
+        pending = PendingAct(rid, obs, key)
+        try:
+            self._queue.put_nowait(pending)
+        except _queue.Full:
+            raise ServerOverloaded(
+                f"admission queue full ({self.queue_cap} requests "
+                f"in-flight at slots={self.slots}) — backpressure; retry "
+                f"later or raise queue_cap/slots") from None
+        return pending
+
+    def act(self, obs: Any, *, key: Optional[Any] = None,
+            timeout: Optional[float] = 30.0) -> np.ndarray:
+        """Blocking convenience: ``submit`` + ``result``."""
+        return self.submit(obs, key=key).result(timeout)
+
+    def reference_act(self, obs: Any, key: Any) -> np.ndarray:
+        """The single-request oracle: one observation through the same
+        compiled padded-batch executable, occupancy 1. The serve path is
+        bitwise-identical to this for every batching pattern (tested)."""
+        obs_b, keys_b = self._alloc_batch()
+        obs_b[0] = np.asarray(obs, dtype=np.float32)
+        keys_b[0] = np.asarray(key, dtype=np.uint32).reshape(2)
+        actions, _ = self._batched_act(self._params, obs_b, keys_b)
+        return np.asarray(actions)[0].copy()
+
+    # ------------------------------------------------------------ the loop
+    def _alloc_batch(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.zeros((self.slots, self.env.obs_dim), np.float32),
+                np.zeros((self.slots, 2), np.uint32))
+
+    def _poll_channel(self) -> None:
+        """Pick up a newly published params version, if any (one shared
+        version-word read when nothing changed)."""
+        leaves, version = self._channel.read(
+            min_version=0, last_version=self.params_version)
+        if leaves is not None:
+            self._params = self._treedef.unflatten(
+                [jnp.asarray(x) for x in leaves])
+            self.params_version = version
+
+    def _serve_loop(self) -> None:
+        while True:
+            batch = []
+            while not batch:                      # wait for the first rider
+                if self._stop.is_set() and self._queue.empty():
+                    return                        # drained — nothing dropped
+                if self._channel is not None:     # track publishes while idle
+                    self._poll_channel()
+                try:
+                    batch.append(self._queue.get(timeout=0.005))
+                except _queue.Empty:
+                    continue
+            deadline = batch[0].enqueue_s + self.deadline_s
+            while len(batch) < self.slots:        # fill until full/expired
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._queue.get(timeout=remaining))
+                except _queue.Empty:
+                    break
+            if self._channel is not None:         # hot-swap between batches
+                self._poll_channel()
+            self._dispatch(batch)
+
+    def _dispatch(self, batch) -> None:
+        obs_b, keys_b = self._alloc_batch()
+        for i, req in enumerate(batch):
+            obs_b[i] = req.obs
+            keys_b[i] = req.key
+        t_dispatch = time.perf_counter()
+        actions, _extras = self._batched_act(self._params, obs_b, keys_b)
+        actions = np.asarray(actions)             # blocks until ready
+        t_done = time.perf_counter()
+        version = self.params_version
+        for i, req in enumerate(batch):
+            req._complete(actions[i].copy(), version, t_dispatch, t_done)
+            self.stats.observe(latency_s=t_done - req.enqueue_s,
+                               queue_wait_s=t_dispatch - req.enqueue_s)
+        self.stats.observe_batch(len(batch))
+
+    # ------------------------------------------------------------- reading
+    def snapshot(self) -> dict:
+        """The shared serving-stats schema (``serve.stats``), plus the
+        live params version."""
+        snap = self.stats.snapshot()
+        snap["params_version"] = self.params_version
+        return snap

@@ -90,6 +90,35 @@ def test_checkpoint_roundtrip(tmp_path, rng_key):
     assert checkpoint.latest_step(path) == 7
 
 
+def test_restore_empty_or_absent_dir_names_directory(tmp_path):
+    """Regression: restore on an empty or absent directory must raise a
+    clear FileNotFoundError naming the directory and latest_step()'s
+    result — not an opaque downstream np.load failure."""
+    template = {"w": jnp.zeros((2,))}
+    absent = str(tmp_path / "nope")
+    with pytest.raises(FileNotFoundError) as exc:
+        checkpoint.restore(absent, template)
+    assert absent in str(exc.value) and "latest_step" in str(exc.value)
+
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    with pytest.raises(FileNotFoundError) as exc:
+        checkpoint.restore(empty, template)
+    assert empty in str(exc.value) and "latest_step" in str(exc.value)
+
+    # explicit missing step: error names the step asked for AND what the
+    # directory actually holds
+    checkpoint.save(empty, 3, template)
+    with pytest.raises(FileNotFoundError) as exc:
+        checkpoint.restore(empty, template, step=7)
+    msg = str(exc.value)
+    assert "7" in msg and "latest_step() -> 3" in msg
+
+    # load_metadata goes through the same resolution
+    with pytest.raises(FileNotFoundError):
+        checkpoint.load_metadata(absent)
+
+
 def test_checkpoint_keep_last_k(tmp_path):
     path = str(tmp_path / "ckpt")
     for step in range(5):

@@ -1,0 +1,340 @@
+"""The policy serving plane (DESIGN.md §8): dynamic batching bitwise
+parity, deadline dispatch, live hot-swap, backpressure, and the
+checkpoint -> serve path."""
+import concurrent.futures
+import multiprocessing
+import os
+import time
+import uuid
+
+import jax
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.core.ipc import ChannelSpec, ParamsChannel
+from repro.serve import (
+    PolicyServer,
+    ServerClosed,
+    ServerOverloaded,
+    ServingStats,
+    load_policy,
+)
+
+
+def _policy(env_name="pendulum", algo_name="ppo", seed=0):
+    env = registry.make("env", env_name)
+    algo = registry.make("algo", algo_name)
+    params, _ = algo.init(jax.random.PRNGKey(seed), env)
+    return env, algo, params
+
+
+def _obs(env, n, seed=0):
+    return np.random.RandomState(seed).randn(
+        n, env.obs_dim).astype(np.float32)
+
+
+# ===================================================== batching bitwise
+def test_batched_act_bitwise_equals_single_request():
+    """The acceptance bar: a request's action is identical whether it
+    rides a full batch, a deadline-expired partial batch, or the
+    single-request reference path — same compiled executable, row-
+    independent rows."""
+    env, algo, params = _policy()
+    observations = _obs(env, 4)
+
+    # full batch: submit everything at once, one dispatch serves all
+    # (a full batch dispatches immediately; the generous deadline only
+    # bounds how long a straggler submission could lag)
+    with PolicyServer(env, algo, params, slots=4,
+                      deadline_ms=500.0) as server:
+        pending = [server.submit(o) for o in observations]
+        batched = [p.result(30.0) for p in pending]
+        refs = [server.reference_act(observations[i],
+                                     np.array([0, i], np.uint32))
+                for i in range(4)]
+        assert server.stats.dispatches == 1   # they really shared a batch
+
+    # per-request: a fresh server (request ids restart at 0 -> same
+    # derived keys), one at a time, each its own partial-batch dispatch
+    with PolicyServer(env, algo, params, slots=4,
+                      deadline_ms=1.0) as server:
+        singles = [server.act(o, timeout=30.0) for o in observations]
+        assert server.stats.dispatches == 4
+
+    for i in range(4):
+        assert np.array_equal(batched[i], singles[i])      # bitwise
+        assert np.array_equal(batched[i], refs[i])
+
+
+def test_explicit_keys_and_extras_algos():
+    """Any registered algo's act() serves; explicit per-request keys
+    reproduce jax.random semantics exactly."""
+    for algo_name in ("ppo", "ddpg", "sac"):
+        env, algo, params = _policy(algo_name=algo_name)
+        obs = _obs(env, 1)[0]
+        key = np.asarray(jax.random.PRNGKey(123))
+        with PolicyServer(env, algo, params, slots=2,
+                          deadline_ms=1.0) as server:
+            action = server.act(obs, key=key, timeout=30.0)
+            again = server.act(obs, key=key, timeout=30.0)
+        assert np.array_equal(action, again), algo_name
+        assert action.shape == (env.act_dim,), algo_name
+
+
+# ==================================================== deadline dispatch
+def test_deadline_triggers_partial_batch():
+    """Fewer requests than slots still dispatch once the oldest request's
+    deadline expires — nothing waits for a batch that never fills."""
+    env, algo, params = _policy()
+    with PolicyServer(env, algo, params, slots=8,
+                      deadline_ms=150.0) as server:
+        t0 = time.perf_counter()
+        pending = [server.submit(o) for o in _obs(env, 3)]
+        actions = [p.result(30.0) for p in pending]
+        elapsed = time.perf_counter() - t0
+        snap = server.snapshot()
+    assert len(actions) == 3
+    assert snap["dispatches"] == 1            # one partial batch
+    assert snap["batch_occupancy"] == pytest.approx(3 / 8)
+    assert snap["wasted_slot_steps"] == 5
+    # dispatched because of the deadline, not because the batch filled:
+    # the oldest request waited >= the window (compile happened at start)
+    assert elapsed >= 0.15
+
+
+def test_full_batch_dispatches_before_deadline():
+    env, algo, params = _policy()
+    with PolicyServer(env, algo, params, slots=4,
+                      deadline_ms=10_000.0) as server:
+        pending = [server.submit(o) for o in _obs(env, 4)]
+        for p in pending:
+            p.result(30.0)                     # would hang if we waited
+        assert server.stats.dispatches == 1
+
+
+# ========================================================== backpressure
+def test_overload_raises_and_inflight_requests_survive():
+    """A full admission queue rejects new work with ServerOverloaded;
+    everything already admitted still completes. (Admission is open
+    before start(), so the queue can be filled deterministically.)"""
+    env, algo, params = _policy()
+    server = PolicyServer(env, algo, params, slots=2, deadline_ms=5.0,
+                          queue_cap=4)
+    pending = []
+    with pytest.raises(ServerOverloaded, match="backpressure"):
+        for o in _obs(env, 16):
+            pending.append(server.submit(o))
+    assert len(pending) == 4                   # exactly queue_cap admitted
+    server.start()                             # now drain: overload
+    for p in pending:                          # rejected new work, it
+        assert p.result(30.0).shape == (env.act_dim,)  # dropped nothing
+    server.close()
+
+
+def test_submit_after_close_raises():
+    env, algo, params = _policy()
+    server = PolicyServer(env, algo, params, slots=2, deadline_ms=1.0)
+    server.start()
+    server.close()
+    with pytest.raises(ServerClosed):
+        server.submit(_obs(env, 1)[0])
+
+
+def test_close_drains_queued_requests():
+    """close() completes every admitted request — nothing is dropped."""
+    env, algo, params = _policy()
+    server = PolicyServer(env, algo, params, slots=4, deadline_ms=50.0,
+                          queue_cap=64)
+    server.start()
+    pending = [server.submit(o) for o in _obs(env, 11)]
+    server.close()
+    for p in pending:
+        assert p.done()
+        assert p.action.shape == (env.act_dim,)
+
+
+# ============================================================== hot-swap
+def _publish_from_child(spec_json: str, scale: float) -> None:
+    """Child-process learner stand-in: attach to the channel and publish
+    every leaf scaled by ``scale``. (Module-level for spawn pickling.)"""
+    import numpy as np
+
+    from repro.core.ipc import ChannelSpec, ParamsChannel
+    chan = ParamsChannel.attach(ChannelSpec.from_json(spec_json))
+    leaves, _version = chan.read()
+    chan.publish([np.asarray(x) * scale for x in leaves])
+    chan.close()
+
+
+def test_hot_swap_mid_traffic_from_concurrent_process():
+    """A ParamsChannel.publish from a *separate process* is picked up
+    mid-traffic: no request is dropped, no action is torn (every action
+    bitwise-matches either the old or the new params, by version), and
+    the server ends on the published version."""
+    env, algo, params = _policy()
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    channel = ParamsChannel.create(
+        leaves, f"walle-test-{os.getpid()}-{uuid.uuid4().hex[:6]}")
+    channel.publish(leaves)                        # version 1: the ckpt
+    scale = 1.5
+    params_v2 = jax.tree.map(lambda x: x * scale, params)
+    observations = _obs(env, 64)
+    try:
+        with PolicyServer(env, algo, params, slots=4, deadline_ms=2.0,
+                          queue_cap=256, params_channel=channel) as server:
+            assert server.params_version == 1
+            ctx = multiprocessing.get_context("spawn")
+            proc = ctx.Process(
+                target=_publish_from_child,
+                args=(channel.spec.to_json(), scale))
+            with concurrent.futures.ThreadPoolExecutor(8) as pool:
+                futures = [pool.submit(server.submit, o)
+                           for o in observations[:16]]
+                pending = [f.result() for f in futures]
+                proc.start()                       # publish concurrently
+                futures = [pool.submit(server.submit, o)
+                           for o in observations[16:]]
+                pending += [f.result() for f in futures]
+            results = [p.result(30.0) for p in pending]
+            proc.join(30.0)
+            assert proc.exitcode == 0
+            # drain any last requests, then the version must have landed
+            deadline = time.monotonic() + 10.0
+            while (server.params_version < 2
+                   and time.monotonic() < deadline):
+                server.act(observations[0], timeout=30.0)
+            assert server.params_version == 2
+            # not torn: each action bitwise-matches the params version
+            # its completion reports — never a mix
+            with PolicyServer(env, algo, params, slots=4,
+                              deadline_ms=2.0) as ref_v1, \
+                 PolicyServer(env, algo, params_v2, slots=4,
+                              deadline_ms=2.0) as ref_v2:
+                for p, action in zip(pending, results):
+                    ref = ref_v1 if p.params_version == 1 else ref_v2
+                    expect = ref.reference_act(p.obs, p.key)
+                    assert np.array_equal(action, expect)
+            assert len(results) == 64              # nothing dropped
+    finally:
+        channel.close(unlink=True)
+
+
+def test_channel_spec_json_roundtrip():
+    leaves = [np.zeros((2, 3), np.float32), np.zeros((4,), np.float64)]
+    chan = ParamsChannel.create(
+        leaves, f"walle-json-{os.getpid()}-{uuid.uuid4().hex[:6]}")
+    try:
+        spec = ChannelSpec.from_json(chan.spec.to_json())
+        assert spec == chan.spec
+    finally:
+        chan.close(unlink=True)
+
+
+def test_leaf_count_mismatch_rejected():
+    env, algo, params = _policy()
+    chan = ParamsChannel.create(
+        [np.zeros((1,), np.float32)],
+        f"walle-mism-{os.getpid()}-{uuid.uuid4().hex[:6]}")
+    try:
+        with pytest.raises(ValueError, match="leaves"):
+            PolicyServer(env, algo, params, params_channel=chan)
+    finally:
+        chan.close(unlink=True)
+
+
+# ============================================== checkpoint -> serve path
+def test_serve_from_checkpoint_end_to_end(tmp_path):
+    """train (tiny) -> checkpoint -> load_policy -> serve: the restored
+    policy's served actions bitwise-match acting with the trained params
+    directly."""
+    from repro import experiment
+    from repro.checkpoint import save
+    from repro.experiment import ExperimentSpec, Schedule
+    spec = ExperimentSpec(
+        env="pendulum", algo="ppo",
+        schedule=Schedule(num_samplers=1, global_batch=2, horizon=8,
+                          iterations=2, seed=0))
+    result = experiment.run(spec)
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 2, result.params,
+         metadata={"mode": "rl", "spec": spec.to_dict()})
+
+    handle = load_policy(ckpt)
+    assert handle.spec.env == "pendulum" and handle.step == 2
+    for a, b in zip(jax.tree.leaves(result.params),
+                    jax.tree.leaves(handle.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    obs = _obs(handle.env, 1)[0]
+    key = np.asarray(jax.random.PRNGKey(7))
+    with PolicyServer.from_checkpoint(ckpt, slots=2,
+                                      deadline_ms=1.0) as server:
+        served = server.act(obs, key=key, timeout=30.0)
+        expect = server.reference_act(obs, key)
+    assert np.array_equal(served, expect)
+
+
+def test_load_policy_absent_dir_clear_error(tmp_path):
+    """The serve loader surfaces checkpoint.restore's clear error for an
+    empty/absent checkpoint directory (regression: was an opaque np.load
+    failure; full coverage in test_optim_ckpt.py)."""
+    absent = str(tmp_path / "no-such-ckpt")
+    with pytest.raises(FileNotFoundError) as exc:
+        load_policy(absent)
+    assert absent in str(exc.value) and "latest_step" in str(exc.value)
+
+
+def test_load_policy_rejects_specless_checkpoint(tmp_path):
+    from repro.checkpoint import save
+    ckpt = str(tmp_path / "lm")
+    save(ckpt, 1, {"w": np.zeros((2,))}, metadata={"mode": "lm"})
+    with pytest.raises(ValueError, match="ExperimentSpec"):
+        load_policy(ckpt)
+
+
+# ================================================== the stats helper
+def test_serving_stats_schema_and_percentiles():
+    stats = ServingStats(slots=4)
+    for ms in (1, 2, 3, 4, 5, 6, 7, 8, 9, 100):
+        stats.observe(latency_s=ms / 1e3, queue_wait_s=ms / 2e3)
+    stats.observe_batch(4)
+    stats.observe_batch(2)
+    snap = stats.snapshot()
+    assert snap["requests"] == 10 and snap["dispatches"] == 2
+    assert snap["latency_ms"]["p50"] == pytest.approx(5.0)
+    assert snap["latency_ms"]["p99"] == pytest.approx(100.0)
+    assert snap["latency_ms"]["max"] == pytest.approx(100.0)
+    assert snap["batch_occupancy"] == pytest.approx(6 / 8)
+    assert snap["wasted_slot_steps"] == 2
+    assert set(snap) == {"requests", "dispatches", "slots", "latency_ms",
+                         "queue_wait_ms", "batch_occupancy",
+                         "wasted_slot_steps", "requests_per_sec"}
+    with pytest.raises(ValueError, match="occupied"):
+        stats.observe_batch(5)
+
+
+def test_slot_server_reports_shared_schema():
+    """core.serving.SlotServer reports through the same stats schema —
+    wasted_slot_steps surfaced, occupancy/latency populated."""
+    from repro.configs import get_config
+    from repro.core.serving import Request, SlotServer
+    from repro.models import transformer as T
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    server = SlotServer(cfg, T.init_params(cfg, jax.random.PRNGKey(0)),
+                        slots=2, prompt_len=6, max_new_tokens=4)
+    import jax.numpy as jnp
+    server.submit(Request(request_id=0, prompt=jnp.zeros((6,), jnp.int32),
+                          max_new_tokens=2))
+    server.submit(Request(request_id=1, prompt=jnp.zeros((6,), jnp.int32),
+                          max_new_tokens=4))
+    server.run()
+    snap = server.snapshot()
+    assert set(snap) >= {"requests", "dispatches", "latency_ms",
+                         "batch_occupancy", "wasted_slot_steps",
+                         "requests_per_sec"}
+    assert snap["requests"] == 2
+    # request 0 finished at 2 tokens and rode out steps 3..4 wasted
+    assert snap["wasted_slot_steps"] == server.wasted_slot_steps == 2
+    assert 0 < snap["batch_occupancy"] < 1
+    assert snap["latency_ms"]["p99"] >= snap["latency_ms"]["p50"] > 0
