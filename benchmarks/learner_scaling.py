@@ -1,0 +1,102 @@
+"""Learner-plane scaling row: train-step time + samples/sec vs D devices.
+
+The multi-device learner (``distributed/learner.py``, DESIGN.md §9) shards
+the learner batch over D mesh devices and all-reduces gradients with one
+psum. This section records that trajectory: for each D in ``DS`` the same
+ppo experiment is trained with ``Schedule.learner_devices=D`` and the
+steady-state train-step time (min over post-compile iterations) lands in
+``BENCH_<rev>.json`` as ``learner_ppo_D{d}`` with ``samples_per_sec`` and
+``train_step_ms`` metrics.
+
+Each D runs in its own subprocess because device fan-out must be fixed
+*before* jax initialises: the child sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` at the top, ahead
+of the jax import. On a real multi-core/multi-accelerator host the forced
+host devices map to genuinely parallel compute and the row measures
+speedup; on a 1-core container they time-slice one core, so the row
+instead measures the sharding + collective *overhead* floor — either way
+the D-trajectory is recorded per revision and ``run.py --compare`` can
+flag regressions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, Sequence, Tuple
+
+from benchmarks.common import emit
+
+DS: Tuple[int, ...] = (1, 2, 4, 8)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# child: force 8 host devices before jax import, train ppo with the
+# sharded learner, report steady-state train-step time on one JSON line
+_CHILD = r"""
+import json, os, sys
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
+from repro import experiment
+from repro.experiment import ExperimentSpec, Schedule
+
+d, iters, budget, env_batch = map(int, sys.argv[1:5])
+spec = ExperimentSpec(
+    env="pendulum", algo="ppo", backend="inline", runtime="sync",
+    model={"hidden": 64},
+    schedule=Schedule(num_samplers=1, global_batch=env_batch,
+                      horizon=budget // env_batch, seed=3,
+                      learner_devices=(d if d > 1 else None)))
+runner = experiment.build(spec)
+try:
+    logs = runner.run(iters)
+finally:
+    runner.close()
+steady = logs[1:]  # iteration 0 is jit compile
+print("LEARNER_RESULT " + json.dumps(
+    {"d": d, "learn_s": min(l.learn_time for l in steady),
+     "samples": steady[0].samples}))
+"""
+
+
+def sweep(ds: Sequence[int] = DS, iterations: int = 4, budget: int = 2048,
+          env_batch: int = 16) -> Dict[int, float]:
+    """samples/sec through the learner plane for each device count D."""
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   p for p in (os.path.join(REPO, "src"),
+                               os.environ.get("PYTHONPATH", "")) if p))
+    out = {}
+    for d in ds:
+        proc = subprocess.run(
+            [sys.executable, "-c", _CHILD, str(d), str(iterations),
+             str(budget), str(env_batch)],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+        if proc.returncode:
+            raise RuntimeError(
+                f"learner scaling child D={d} failed:\n"
+                f"{proc.stderr[-2000:]}")
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("LEARNER_RESULT ")][-1]
+        rec = json.loads(line.split(" ", 1)[1])
+        sps = rec["samples"] / rec["learn_s"]
+        emit(f"learner_ppo_D{d}", rec["learn_s"] * 1e6,
+             f"samples_per_sec={sps:.0f} "
+             f"train_step_ms={rec['learn_s'] * 1e3:.2f} "
+             f"d={d} budget={budget}")
+        out[d] = sps
+    return out
+
+
+def run_all(ds: Sequence[int] = DS) -> Dict[int, float]:
+    return sweep(ds=ds)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ds", default=",".join(map(str, DS)))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_all(ds=tuple(int(d) for d in args.ds.split(",")))

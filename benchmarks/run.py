@@ -13,6 +13,9 @@ of evaporating into stdout. Sections:
   sampler     actor-plane scaling: samples/sec vs N per backend
               (inline vs threaded vs true worker processes), plus the
               vector-collection row at env_batch=B     [DESIGN.md §6]
+  learner     learner-plane scaling: train-step time + samples/sec vs
+              D devices (sharded learner, forced host devices)
+                                                       [DESIGN.md §9]
   env_step    env-plane: fused step+auto-reset kernels ref-vs-pallas at
               B in {1k,10k,100k} + VectorEnv rollout throughput vs the
               inline N=1 baseline                      [DESIGN.md §7]
@@ -29,6 +32,15 @@ are skipped gracefully if absent).
 
   python -m benchmarks.run                          # everything
   python -m benchmarks.run --sections kernels_rl    # one section, fast
+  python -m benchmarks.run --compare OLD.json NEW.json
+                                                    # diff two reports;
+                                                    # exit 1 on regression
+
+``--compare`` diffs the rows two BENCH files share and prints per-metric
+deltas; throughput metrics (``*_per_sec``) that drop — or ``us_per_call``
+that rises — by more than ``--threshold`` percent count as regressions
+and make the exit status nonzero, so CI can consume the BENCH trajectory
+directly.
 """
 from __future__ import annotations
 
@@ -38,17 +50,20 @@ import json
 import os
 import platform
 import subprocess
+import sys
 import time
 
 
 def _sections():
     from benchmarks import env_step_bench, fig_parallel, fused_vs_stepped, \
-        kernel_bench, replay_bench, roofline, sampler_scaling, serving_bench
+        kernel_bench, learner_scaling, replay_bench, roofline, \
+        sampler_scaling, serving_bench
     return {
         "fig": fig_parallel.run_all,
         "fused": fused_vs_stepped.run_all,
         "replay": replay_bench.run_all,
         "sampler": sampler_scaling.run_all,
+        "learner": learner_scaling.run_all,
         "env_step": env_step_bench.run_all,
         "serving": serving_bench.run_all,
         "kernels_lm": kernel_bench.run_lm,
@@ -105,6 +120,54 @@ def write_report(out_dir: str, sections) -> str:
     return path
 
 
+def _load_records(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    # index by row name; a re-emitted name keeps its latest measurement
+    return {r["name"]: r for r in payload.get("benchmarks", [])}, \
+        payload.get("rev", "?")
+
+
+def compare(old_path: str, new_path: str, threshold: float) -> int:
+    """Diff the benchmark rows two BENCH reports share.
+
+    Prints one line per (row, metric) with old/new values and the percent
+    delta. ``us_per_call`` is lower-is-better; ``*_per_sec`` metrics are
+    higher-is-better; everything else is informational. Returns the
+    number of metrics that regressed by more than ``threshold`` percent.
+    """
+    old, old_rev = _load_records(old_path)
+    new, new_rev = _load_records(new_path)
+    shared = [n for n in new if n in old]
+    only_old = sorted(set(old) - set(new))
+    only_new = sorted(set(new) - set(old))
+    print(f"# compare {old_rev} -> {new_rev}: {len(shared)} shared rows, "
+          f"{len(only_old)} dropped, {len(only_new)} added")
+    print("name,metric,old,new,delta_pct,verdict")
+    regressions = 0
+    for name in shared:
+        pairs = [("us_per_call", old[name]["us_per_call"],
+                  new[name]["us_per_call"], False)]
+        om, nm = old[name].get("metrics", {}), new[name].get("metrics", {})
+        for k in sorted(set(om) & set(nm)):
+            pairs.append((k, om[k], nm[k], k.endswith("per_sec")))
+        for metric, o, n, higher_better in pairs:
+            if not o:
+                continue
+            delta = (n - o) / abs(o) * 100.0
+            judged = higher_better or metric == "us_per_call"
+            regressed = judged and (
+                -delta > threshold if higher_better else delta > threshold)
+            verdict = ("REGRESSED" if regressed
+                       else "ok" if judged else "info")
+            regressions += regressed
+            print(f"{name},{metric},{o:.6g},{n:.6g},{delta:+.1f},{verdict}")
+    if regressions:
+        print(f"# {regressions} metric(s) regressed more than "
+              f"{threshold:.0f}%")
+    return regressions
+
+
 def main(argv=None) -> None:
     table = _sections()
     ap = argparse.ArgumentParser()
@@ -112,7 +175,18 @@ def main(argv=None) -> None:
                     help="comma-separated subset of: " + ", ".join(table))
     ap.add_argument("--out-dir", default="results",
                     help="where BENCH_<rev>.json lands (default: results)")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD.json", "NEW.json"),
+                    default=None,
+                    help="diff two BENCH reports instead of running "
+                         "benchmarks; nonzero exit on regression")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="--compare: percent drop in *_per_sec (or rise "
+                         "in us_per_call) that counts as a regression "
+                         "(default 10)")
     args = ap.parse_args(argv)
+    if args.compare is not None:
+        sys.exit(1 if compare(args.compare[0], args.compare[1],
+                              args.threshold) else 0)
     names = [s.strip() for s in args.sections.split(",") if s.strip()]
     unknown = [s for s in names if s not in table]
     if unknown:

@@ -81,6 +81,10 @@ class AlgorithmBase:
     tail_keys: Tuple[str, ...] = ()
     default_buffer = "fifo"
     updates_per_collect = 1
+    # safe to wrap in the shard_map data-parallel learner: the algorithm's
+    # ``learn`` routes every gradient through ``grad_sync.value_and_grad``
+    # (TRPO's conjugate-gradient line search does not, so it opts out)
+    shardable = True
 
     def make_rollout(self, env, horizon: int):
         return sampler_mod.make_algo_rollout(self, env, horizon)
@@ -240,6 +244,7 @@ class TRPOAlgorithm(GaussianMLPAlgorithm):
     layout as PPO, so it shares the PPO rollout."""
 
     name = "trpo"
+    shardable = False               # CG/line-search grads bypass grad_sync
 
     def __init__(self, lr: float = None, hidden: int = 64, **cfg_kwargs):
         if lr is not None:

@@ -12,6 +12,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import grad_sync
 from repro.models.mlp_policy import init_mlp_net, mlp_apply
 from repro.optim import apply_updates
 
@@ -63,31 +64,34 @@ def ddpg_update(params, opt_states, batch, cfg: DDPGConfig,
     replay); metrics always carry per-sample ``priorities`` (|TD error|)
     for the buffer to absorb.
     """
-    if "discounts" in batch:
-        discounts = batch["discounts"]
-    else:
-        discounts = cfg.gamma * (1.0 - batch["dones"].astype(jnp.float32))
-    weights = batch.get("weights", jnp.ones_like(batch["rewards"]))
-    a_next = actor_apply(params["target_actor"], batch["next_obs"])
-    q_next = critic_apply(params["target_critic"], batch["next_obs"], a_next)
-    target = batch["rewards"] + discounts * q_next
-
-    def critic_loss(cnet):
-        q = critic_apply(cnet, batch["obs"], batch["actions"])
+    def critic_loss(cnet, b):
+        # targets are recomputed per (micro)batch slice — elementwise
+        # identical to the historical whole-batch form, and what lets the
+        # sharded learner (grad_sync) slice/shard this loss freely
+        if "discounts" in b:
+            discounts = b["discounts"]
+        else:
+            discounts = cfg.gamma * (1.0 - b["dones"].astype(jnp.float32))
+        weights = b.get("weights", jnp.ones_like(b["rewards"]))
+        a_next = actor_apply(params["target_actor"], b["next_obs"])
+        q_next = critic_apply(params["target_critic"], b["next_obs"], a_next)
+        target = b["rewards"] + discounts * q_next
+        q = critic_apply(cnet, b["obs"], b["actions"])
         loss = jnp.mean(weights * (q - jax.lax.stop_gradient(target)) ** 2)
-        return loss, q
+        return loss, (q, jax.lax.stop_gradient(target))
 
-    (c_loss, q_pre), c_grads = jax.value_and_grad(
-        critic_loss, has_aux=True)(params["critic"])
+    (c_loss, (q_pre, target)), c_grads = grad_sync.value_and_grad(
+        critic_loss, params["critic"], batch, has_aux=True)
     c_upd, c_state = critic_opt.update(c_grads, opt_states[1],
                                        params["critic"])
     critic = apply_updates(params["critic"], c_upd)
 
-    def actor_loss(anet):
-        a = actor_apply(anet, batch["obs"])
-        return -jnp.mean(critic_apply(critic, batch["obs"], a))
+    def actor_loss(anet, b):
+        a = actor_apply(anet, b["obs"])
+        return -jnp.mean(critic_apply(critic, b["obs"], a))
 
-    a_loss, a_grads = jax.value_and_grad(actor_loss)(params["actor"])
+    a_loss, a_grads = grad_sync.value_and_grad(
+        actor_loss, params["actor"], batch)
     a_upd, a_state = actor_opt.update(a_grads, opt_states[0],
                                       params["actor"])
     actor = apply_updates(params["actor"], a_upd)

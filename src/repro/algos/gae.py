@@ -30,4 +30,20 @@ def gae(rewards: jnp.ndarray, values: jnp.ndarray, dones: jnp.ndarray,
 
 
 def normalize(adv: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
-    return (adv - jnp.mean(adv)) / (jnp.std(adv) + eps)
+    """Standardise advantages over the *global* batch.
+
+    Inside a sharded learner trace (``grad_sync.activate``) each shard
+    only holds its batch slice, so the mean/variance are pmean'd across
+    the data axes — every shard normalises by the same global statistics,
+    matching what a single device would compute over the full batch (up
+    to reduction order). Outside that context this is bitwise the
+    historical ``(adv - mean) / (std + eps)``.
+    """
+    from repro.distributed import grad_sync
+    axes = grad_sync.reduce_axes()
+    if axes is None:
+        return (adv - jnp.mean(adv)) / (jnp.std(adv) + eps)
+    import jax
+    m = jax.lax.pmean(jnp.mean(adv), axes)
+    var = jax.lax.pmean(jnp.mean((adv - m) ** 2), axes)
+    return (adv - m) / (jnp.sqrt(var) + eps)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.algos import gae as gae_mod
+from repro.distributed import grad_sync
 from repro.models import mlp_policy, transformer
 from repro.optim import adam, apply_updates, clip_by_global_norm
 
@@ -64,8 +65,8 @@ def mlp_ppo_update(params, opt_state, batch, cfg: PPOConfig, optimizer):
         params, opt_state = carry
         sl = jax.tree.map(
             lambda x: jax.lax.dynamic_slice_in_dim(x, idx * mb, mb), perm_batch)
-        (loss, metrics), grads = jax.value_and_grad(
-            mlp_ppo_loss, has_aux=True)(params, sl, cfg)
+        (loss, metrics), grads = grad_sync.value_and_grad(
+            lambda p, b: mlp_ppo_loss(p, b, cfg), params, sl, has_aux=True)
         grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = apply_updates(params, updates)

@@ -18,6 +18,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import grad_sync
 from repro.models.mlp_policy import gaussian_logp, init_mlp_net, mlp_apply
 from repro.optim import adam, apply_updates
 
@@ -89,39 +90,41 @@ def sac_update(params, opt_states, batch, key, cfg: SACConfig,
     act_dim = batch["actions"].shape[-1]
     target_entropy = -float(act_dim)
     alpha = jnp.exp(params["log_alpha"])
-    weights = batch.get("weights", jnp.ones_like(batch["rewards"]))
 
     # ---- twin-critic regression against the entropy-regularized target
-    a_next, logp_next = sample_action(params["actor"], batch["next_obs"],
-                                      k_next)
-    q_next = jnp.minimum(
-        q_apply(params["target_critic"]["q1"], batch["next_obs"], a_next),
-        q_apply(params["target_critic"]["q2"], batch["next_obs"], a_next))
-    target = batch["rewards"] + batch["discounts"] * (
-        q_next - alpha * logp_next)
-    target = jax.lax.stop_gradient(target)
-
-    def critic_loss(cnet):
-        q1 = q_apply(cnet["q1"], batch["obs"], batch["actions"])
-        q2 = q_apply(cnet["q2"], batch["obs"], batch["actions"])
+    # (target built inside the loss so the sharded learner can slice the
+    # batch; elementwise-identical to the historical whole-batch form —
+    # the caveat being that under microbatching each slice reuses the
+    # same k_next/k_new, see DESIGN.md §9)
+    def critic_loss(cnet, b):
+        w = b.get("weights", jnp.ones_like(b["rewards"]))
+        a_next, logp_next = sample_action(params["actor"], b["next_obs"],
+                                          k_next)
+        q_next = jnp.minimum(
+            q_apply(params["target_critic"]["q1"], b["next_obs"], a_next),
+            q_apply(params["target_critic"]["q2"], b["next_obs"], a_next))
+        target = jax.lax.stop_gradient(
+            b["rewards"] + b["discounts"] * (q_next - alpha * logp_next))
+        q1 = q_apply(cnet["q1"], b["obs"], b["actions"])
+        q2 = q_apply(cnet["q2"], b["obs"], b["actions"])
         loss = 0.5 * jnp.mean(
-            weights * ((q1 - target) ** 2 + (q2 - target) ** 2))
-        return loss, (q1, q2)
+            w * ((q1 - target) ** 2 + (q2 - target) ** 2))
+        return loss, (q1, q2, target)
 
-    (c_loss, (q1, q2)), c_grads = jax.value_and_grad(
-        critic_loss, has_aux=True)(params["critic"])
+    (c_loss, (q1, q2, target)), c_grads = grad_sync.value_and_grad(
+        critic_loss, params["critic"], batch, has_aux=True)
     c_upd, c_state = critic_opt.update(c_grads, c_state, params["critic"])
     critic = apply_updates(params["critic"], c_upd)
 
     # ---- reparameterized actor step against the fresh critic
-    def actor_loss(anet):
-        a_new, logp = sample_action(anet, batch["obs"], k_new)
-        q_min = jnp.minimum(q_apply(critic["q1"], batch["obs"], a_new),
-                            q_apply(critic["q2"], batch["obs"], a_new))
+    def actor_loss(anet, b):
+        a_new, logp = sample_action(anet, b["obs"], k_new)
+        q_min = jnp.minimum(q_apply(critic["q1"], b["obs"], a_new),
+                            q_apply(critic["q2"], b["obs"], a_new))
         return jnp.mean(alpha * logp - q_min), logp
 
-    (a_loss, logp_new), a_grads = jax.value_and_grad(
-        actor_loss, has_aux=True)(params["actor"])
+    (a_loss, logp_new), a_grads = grad_sync.value_and_grad(
+        actor_loss, params["actor"], batch, has_aux=True)
     a_upd, a_state = actor_opt.update(a_grads, a_state, params["actor"])
     actor = apply_updates(params["actor"], a_upd)
 
@@ -131,6 +134,7 @@ def sac_update(params, opt_states, batch, key, cfg: SACConfig,
             logp_new + target_entropy))
 
     al_loss, al_grad = jax.value_and_grad(alpha_loss)(params["log_alpha"])
+    al_grad = grad_sync.sync(al_grad)
     al_upd, al_state = alpha_opt.update(al_grad, al_state,
                                         params["log_alpha"])
     log_alpha = apply_updates(params["log_alpha"], al_upd)

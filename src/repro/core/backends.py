@@ -198,10 +198,15 @@ class ProcessBackend(BackendCloseMixin):
     def __init__(self, pool):
         self.pool = pool
         self.num_samplers = pool.num_workers
+        # command workers one at a time instead of broadcasting: on hosts
+        # with fewer cores than workers this removes peer preemption from
+        # the per-worker timings (see ProcessWorkerPool.collect) — the
+        # benchmark harness flips it for steady-state measurement
+        self.staggered = False
 
     def collect(self, params):
         self.pool.publish(params)
-        trajs, times, _loops = self.pool.collect()
+        trajs, times, _loops = self.pool.collect(staggered=self.staggered)
         merged = merge_trajs(trajs)
         return merged, CollectStats(times, trajectory.num_samples(merged))
 

@@ -565,10 +565,24 @@ class ProcessWorkerPool:
              for x in jax.tree_util.tree_leaves(params)])
         return self.version
 
-    def collect(self) -> Tuple[List[Dict[str, np.ndarray]], List[float],
-                               List[float]]:
+    def collect(self, staggered: bool = False
+                ) -> Tuple[List[Dict[str, np.ndarray]], List[float],
+                           List[float]]:
         """One lock-step sweep: every worker rolls once under the current
-        params version; trajectories come back in worker-index order."""
+        params version; trajectories come back in worker-index order.
+
+        ``staggered=True`` commands workers one at a time, awaiting each
+        result before waking the next. On hosts with fewer cores than
+        workers the default broadcast makes every worker's self-timed
+        rollout include preemption by its peers (they time-slice the same
+        cores), so the per-worker times — and the critical-path throughput
+        derived from them — measure scheduler contention, not sampler
+        work. Staggering serializes the sweep so each worker runs
+        uncontended, recovering the per-sampler steady-state timing the
+        inline backend's serial sweep reports (DESIGN.md §2's
+        methodology). Trajectories, merge order and determinism are
+        identical either way — only the wall-clock overlap changes.
+        """
         if self._closed:
             raise RuntimeError("worker pool is closed")
         if self._freerunning:
@@ -576,12 +590,20 @@ class ProcessWorkerPool:
                 "pool is free-running (async mode); lock-step collect() "
                 "would interleave with unsolicited rollouts")
         version = self.channel.version
-        for q in self._cmd:
-            q.put(("collect", version))
         got: Dict[int, Tuple[int, float, float]] = {}
-        while len(got) < self.num_workers:
-            _, wid, slot, _v, dt, loop_dt = self._get(self.collect_timeout)
-            got[wid] = (slot, dt, loop_dt)
+        if staggered:
+            for i in range(self.num_workers):
+                self._cmd[i].put(("collect", version))
+                _, wid, slot, _v, dt, loop_dt = self._get(
+                    self.collect_timeout)
+                got[wid] = (slot, dt, loop_dt)
+        else:
+            for q in self._cmd:
+                q.put(("collect", version))
+            while len(got) < self.num_workers:
+                _, wid, slot, _v, dt, loop_dt = self._get(
+                    self.collect_timeout)
+                got[wid] = (slot, dt, loop_dt)
         trajs, times, loops = [], [], []
         for i in range(self.num_workers):        # deterministic merge order
             slot, dt, loop_dt = got[i]

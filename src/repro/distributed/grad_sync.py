@@ -1,0 +1,134 @@
+"""Trace-time gradient synchronisation + microbatch accumulation context.
+
+The multi-device learner (``distributed/learner.py``) wraps an algorithm's
+train step in ``shard_map`` with the batch sharded along the mesh's data
+axes. Every algorithm update routes its gradient computation through
+``value_and_grad`` below instead of calling ``jax.value_and_grad``
+directly; outside a sharded trace the call is *exactly*
+``jax.value_and_grad`` (bitwise — the D=1 guarantee), while inside it
+
+* optionally splits the per-shard batch into M microbatches and
+  accumulates gradients with a ``lax.scan`` (gradient accumulation so the
+  global batch scales past per-device memory), and
+* combines gradients across shards with a single ``lax.pmean`` per loss —
+  the one psum all-reduce of the schedule (DESIGN.md §9).
+
+Because the pmean'd gradients and the replicated params are identical on
+every shard, global-norm clipping and the optimizer update are recomputed
+identically per shard and params *stay* replicated without any further
+collective.
+
+The context is module-global and trace-scoped (same pattern as
+``distributed/context.py``): ``learner.py`` enters ``activate`` inside the
+shard_map body, so only the wrapped trace sees it.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class _GradSyncCtx(NamedTuple):
+    axes: Optional[Tuple[str, ...]]   # mesh axes to pmean over (None: off)
+    microbatches: int                 # M accumulation steps (1: off)
+
+
+_ACTIVE: Optional[_GradSyncCtx] = None
+
+
+@contextlib.contextmanager
+def activate(axes: Optional[Tuple[str, ...]], microbatches: int = 1):
+    """Enter the sync context for the duration of a (traced) train step."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = _GradSyncCtx(tuple(axes) if axes else None,
+                           max(1, int(microbatches)))
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def active() -> Optional[_GradSyncCtx]:
+    return _ACTIVE
+
+
+def reduce_axes() -> Optional[Tuple[str, ...]]:
+    """Mesh axes the current trace must reduce batch statistics over
+    (e.g. advantage normalisation), or None outside a sharded trace."""
+    return _ACTIVE.axes if _ACTIVE is not None else None
+
+
+def sync(tree):
+    """pmean a gradient pytree across the active axes (no-op otherwise).
+
+    For gradients computed outside :func:`value_and_grad` — e.g. SAC's
+    temperature gradient.
+    """
+    if _ACTIVE is None or not _ACTIVE.axes:
+        return tree
+    axes = _ACTIVE.axes
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axes), tree)
+
+
+def _combine_aux(stacked, mb: int):
+    """Fold microbatch-stacked aux back to full-batch shape.
+
+    Leaves stacked as ``(M,)`` (per-microbatch scalars, e.g. loss terms)
+    are averaged; leaves ``(M, mb, ...)`` (per-sample vectors, e.g. TD
+    errors feeding priorities) are concatenated back to ``(M*mb, ...)`` so
+    downstream code sees the same layout as the unsliced loss would
+    produce.
+    """
+    def one(x):
+        if x.ndim >= 2 and x.shape[1] == mb:
+            return x.reshape((x.shape[0] * mb,) + x.shape[2:])
+        return jnp.mean(x, axis=0)
+
+    return jax.tree.map(one, stacked)
+
+
+def value_and_grad(loss_fn, params, batch, has_aux: bool = False):
+    """``jax.value_and_grad(loss_fn, has_aux)(params, batch)`` routed
+    through the active sync context.
+
+    ``loss_fn(params, batch)`` must mean-reduce its loss over the batch's
+    leading axis so microbatch/shard averaging composes exactly. Returns
+    ``(out, grads)`` with the same contract as ``jax.value_and_grad``.
+    """
+    ctx = _ACTIVE
+    m = ctx.microbatches if ctx is not None else 1
+    if m <= 1:
+        out, grads = jax.value_and_grad(loss_fn, has_aux=has_aux)(
+            params, batch)
+    else:
+        n = max(x.shape[0] for x in jax.tree.leaves(batch) if x.ndim)
+        if n % m:
+            raise ValueError(
+                f"microbatch accumulation needs the per-shard batch ({n}) "
+                f"divisible by learner_microbatches ({m})")
+        mb = n // m
+
+        def one_micro(carry, i):
+            # leaves without the batch's leading dim (PRNG keys, scalars)
+            # pass through whole
+            sl = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb)
+                if x.ndim and x.shape[0] == n else x,
+                batch)
+            o, g = jax.value_and_grad(loss_fn, has_aux=has_aux)(params, sl)
+            return carry, (o, g)
+
+        _, (outs, grads) = jax.lax.scan(one_micro, 0, jnp.arange(m))
+        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        if has_aux:
+            loss, aux = outs
+            out = (jnp.mean(loss), _combine_aux(aux, mb))
+        else:
+            out = jnp.mean(outs)
+    if ctx is not None and ctx.axes:
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, ctx.axes), grads)
+    return out, grads

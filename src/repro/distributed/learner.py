@@ -1,0 +1,146 @@
+"""The multi-device learner plane: shard_map data-parallel training.
+
+``ShardedLearner`` wraps any shardable ``Algorithm``'s composed train
+step (``algos.api.make_train_step``) in ``shard_map_compat`` over a
+learner mesh:
+
+* trajectories / replay minibatches shard along the mesh's batch axes
+  (``pod``+``data`` — each data slice consumes one collection slice);
+* params and optimizer state stay **replicated**: every gradient inside
+  the step is pmean'd across shards by the ``grad_sync`` context, so the
+  (identical) clip + optimizer update is recomputed per shard and
+  replication is preserved without a post-step broadcast — one psum
+  all-reduce per loss is the entire collective schedule;
+* buffer state rides the plane sharded (``replay_sharded``): per-shard
+  rings / sum-trees with a psum'd global root, so off-policy algorithms
+  sample without a gather;
+* gradient-accumulation microbatching (``microbatches > 1``) scans the
+  per-shard batch in M slices inside ``grad_sync.value_and_grad``, so the
+  global batch scales past per-device memory.
+
+The wrapped step has the exact ``(params, opt_state, plane, traj)``
+signature every runner drives, so inline/threaded/process backends and
+the fused scan carry thread it through unchanged — selection happens
+once, in ``experiment.build`` (``Schedule.learner_devices`` /
+``train.py --learner-devices``). With ``learner_devices=1`` the build
+bypasses this module entirely (bitwise guarantee); a 1-device mesh
+through this wrapper is also bitwise (tests), since every collective is
+over a singleton axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.algos.api import make_train_step
+from repro.distributed import grad_sync
+from repro.distributed.replay_sharded import shard_buffer
+from repro.distributed.sharding import (
+    axes_size,
+    batch_axes,
+    shard_map_compat,
+)
+
+
+def learner_mesh(num_devices: int) -> Mesh:
+    """A ``(data, model)`` mesh over the first ``num_devices`` devices —
+    the same layout ``core.backends`` builds for the sharded sampler."""
+    devs = jax.devices()
+    if num_devices > len(devs):
+        raise ValueError(
+            f"learner_devices={num_devices} but only {len(devs)} JAX "
+            f"device(s) are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_devices} "
+            f"before importing jax")
+    return Mesh(np.asarray(devs[:num_devices]).reshape(num_devices, 1),
+                ("data", "model"))
+
+
+class ShardedLearner:
+    """Builds and owns the shard_map-wrapped train step.
+
+    ``train_step`` is a drop-in for ``make_train_step(algo, buffer)``;
+    ``buffer`` (possibly wrapped sharded) must be used for plane init so
+    sharded leaves are allocated at global (tiled) size.
+    """
+
+    def __init__(self, algo, buffer, num_devices: int = 1,
+                 microbatches: int = 1, mesh: Optional[Mesh] = None):
+        self.algo = algo
+        self.microbatches = max(1, int(microbatches))
+        if mesh is None and num_devices > 1:
+            mesh = learner_mesh(num_devices)
+        self.mesh = mesh
+        self.axes: Tuple[str, ...] = batch_axes(mesh) if mesh else ()
+        self.num_shards = axes_size(mesh, self.axes) if mesh else 1
+        if self.num_shards > 1 and not getattr(algo, "shardable", False):
+            raise ValueError(
+                f"algorithm {getattr(algo, 'name', algo)!r} does not "
+                f"support the sharded learner (shardable=False)")
+        if self.num_shards > 1:
+            self.buffer = shard_buffer(buffer, self.num_shards, self.axes)
+        else:
+            self.buffer = buffer
+        self._step = make_train_step(algo, self.buffer)
+        self._wrapped = None
+
+    # ------------------------------------------------------------- specs
+    def _traj_spec(self, tree):
+        """Batch-axis specs by trajectory layout: step keys are time-major
+        ``(T, B, ...)`` (batch = dim 1), tail keys are ``(B, ...)``."""
+        tail = set(getattr(self.algo, "tail_keys", ()) or ())
+        return {k: (P(self.axes) if k in tail else P(None, self.axes))
+                for k in tree}
+
+    def _plane_spec(self, buf_state):
+        if hasattr(self.buffer, "state_spec"):
+            return self.buffer.state_spec(buf_state)
+        return self._traj_spec(buf_state)          # fifo: stored trajectory
+
+    # -------------------------------------------------------------- step
+    def _build(self, plane, traj):
+        buf_spec = self._plane_spec(plane[0])
+        plane_spec = (buf_spec, P())               # sample key replicated
+        traj_spec = self._traj_spec(traj)
+        axes = self.axes
+        micro = self.microbatches
+        step = self._step
+
+        def local_step(params, opt_state, plane, traj):
+            with grad_sync.activate(axes, micro):
+                params, opt_state, plane, metrics = step(
+                    params, opt_state, plane, traj)
+            # scalar diagnostics; per-sample priorities were already
+            # consumed inside the step by update_priorities
+            metrics = jax.tree.map(
+                lambda x: jax.lax.pmean(x, axes), metrics)
+            return params, opt_state, plane, metrics
+
+        return shard_map_compat(
+            local_step, self.mesh,
+            (P(), P(), plane_spec, traj_spec),
+            (P(), P(), plane_spec, P()))
+
+    def train_step(self, params, opt_state, plane, traj):
+        if self.num_shards <= 1:
+            # microbatch-accumulation only: no mesh, no collectives
+            with grad_sync.activate(None, self.microbatches):
+                return self._step(params, opt_state, plane, traj)
+        if self._wrapped is None:
+            self._wrapped = self._build(plane, traj)
+        params, opt_state, plane, metrics = self._wrapped(
+            params, opt_state, plane, traj)
+        if not isinstance(jax.tree.leaves(params)[0], jax.core.Tracer):
+            # hand the replicated params back to the default device:
+            # collection (inline/threaded rollout jit, process-worker
+            # publish) is single-device, and a mesh-committed params
+            # array would recompile the rollout as a partitioned SPMD
+            # computation (pathological on forced host devices). Inside
+            # a fused trace the whole iteration is one computation and
+            # the mesh placement is exactly what we want, so traced
+            # params pass through untouched.
+            params = jax.device_put(params, jax.devices()[0])
+        return params, opt_state, plane, metrics

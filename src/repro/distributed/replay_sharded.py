@@ -1,0 +1,293 @@
+"""Sharding-aware experience buffers: per-shard rings and sum-trees whose
+*sampled distribution* is provably identical to the single-buffer
+reference.
+
+These wrappers run **inside** the sharded learner's ``shard_map`` body:
+``add``/``sample``/``update_priorities`` see the *local* (per-shard)
+buffer state and the local trajectory slice, and communicate only through
+``psum``-family collectives. ``init`` is the one host-side entry point —
+it allocates the local state and tiles the sharded leaves ``D``× into the
+global arrays the plane carries between steps (``state_spec`` describes
+which leaves those are).
+
+Layout
+------
+* **uniform** — the ring shards along batch: shard ``s`` owns global
+  slots ``[s*C_loc, (s+1)*C_loc)`` where ``C_loc = capacity / D``. Every
+  shard adds the same number of transitions per iteration (its
+  ``B/D``-wide trajectory slice), so the write index and fill size stay
+  replicated-by-construction and never need a collective.
+* **prioritized** — one sum-tree per shard over its ``C_loc`` leaves,
+  with the global root materialised by a psum of the local totals. With
+  capacity and ``D`` powers of two, each shard's tree is *exactly* a
+  depth-``log2 D`` subtree of the reference global tree, so the global
+  stratified descent factors exactly: the first ``log2 D`` comparisons
+  pick the shard whose cumulative-mass interval contains the draw, and
+  the remaining comparisons are the local descent. Sampling therefore
+  stays O(log C_loc) per shard and the drawn leaf distribution is
+  *identical* (not just equal in expectation) to the single-tree
+  reference over the same leaf masses, up to float-boundary ulps in the
+  interval comparisons — ``tests/test_replay_sharded.py`` checks exact
+  index equality against the reference tree.
+
+Sampling protocol (prioritized)
+-------------------------------
+Every shard holds the replicated sample key, so all of them compute the
+same ``B`` stratified masses over the global total. Each mass is owned by
+the one shard whose prefix interval ``[P_s, P_{s+1})`` contains it (the
+last shard absorbs the ``m >= P_D`` float edge); owners run the local
+descent, and the full batch is reassembled by a masked psum (exact:
+every row is one owner's value plus zeros). Each shard then slices rows
+``[s*B/D, (s+1)*B/D)`` as its learn minibatch. Priority feedback inverts
+the routing: the (replicated) all-gathered ``(indices, priorities)``
+update only the leaves a shard owns, via ``sumtree_update_masked``.
+
+With D=1 every collective is over a singleton axis and every mask is
+all-True, so both wrappers reduce bitwise to their references.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.data import replay
+from repro.data.buffers import (
+    PrioritizedBuffer,
+    PrioritizedState,
+    SumTree,
+    UniformBuffer,
+    sumtree_find_batch,
+)
+from repro.kernels.replay_ring import ring_gather
+from repro.kernels.sum_tree import sumtree_update_masked
+
+
+# ============================================================ collectives
+def shard_index(axes: Tuple[str, ...]) -> jnp.ndarray:
+    """This shard's linear index over ``axes``, matching how shard_map
+    splits a leading dim sharded over the same axes (major-to-minor)."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def gather_scalars(x, my, num_shards: int, axes) -> jnp.ndarray:
+    """All-gather one scalar per shard into a replicated ``(D,)`` vector
+    (one-hot place + psum — the only collective primitive we need)."""
+    place = jnp.where(jnp.arange(num_shards) == my, x,
+                      jnp.zeros((), x.dtype))
+    return jax.lax.psum(place, axes)
+
+
+def gather_rows(x, my, num_shards: int, axes) -> jnp.ndarray:
+    """All-gather per-shard ``(k, ...)`` blocks into replicated
+    ``(D*k, ...)`` (shard-major row order)."""
+    k = x.shape[0]
+    buf = jnp.zeros((num_shards * k,) + x.shape[1:], x.dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, x, my * k, axis=0)
+    return jax.lax.psum(buf, axes)
+
+
+def _assemble(rows: Dict[str, jnp.ndarray], owned, axes):
+    """Merge per-shard candidate rows into the replicated batch: each row
+    is psum(owner's value + zeros elsewhere) — exact, not approximate."""
+    def one(x):
+        mask = owned.reshape(owned.shape + (1,) * (x.ndim - 1))
+        return jax.lax.psum(jnp.where(mask, x, jnp.zeros((), x.dtype)),
+                            axes)
+    return {k: one(v) for k, v in rows.items()}
+
+
+def _my_slice(x, my, block: int):
+    return jax.lax.dynamic_slice_in_dim(x, my * block, block, axis=0)
+
+
+# ========================================================== uniform shards
+class ShardedUniformBuffer:
+    """Uniform replay ring sharded along batch (see module docstring)."""
+
+    name = "uniform"
+    kind = "transitions"
+    passthrough = False
+
+    def __init__(self, inner: UniformBuffer, num_shards: int,
+                 axes: Tuple[str, ...]):
+        if inner.capacity % num_shards:
+            raise ValueError(
+                f"buffer capacity {inner.capacity} must divide evenly "
+                f"over {num_shards} learner shards")
+        if inner.batch_size % num_shards:
+            raise ValueError(
+                f"buffer batch_size {inner.batch_size} must divide evenly "
+                f"over {num_shards} learner shards")
+        self.inner = inner
+        self.num_shards = int(num_shards)
+        self.axes = tuple(axes)
+        self.local_capacity = inner.capacity // num_shards
+        self.local = UniformBuffer(self.local_capacity, inner.batch_size,
+                                   inner.n_step, inner.gamma)
+        self.batch_size = inner.batch_size
+
+    # ---- host side: global (tiled) plane state + its PartitionSpecs
+    def init(self, example) -> replay.ReplayState:
+        local = self.local.init(example)
+        tile = lambda x: jnp.concatenate([x] * self.num_shards, axis=0)
+        return replay.ReplayState(jax.tree.map(tile, local.storage),
+                                  local.index, local.size)
+
+    def state_spec(self, state: replay.ReplayState) -> replay.ReplayState:
+        data = P(self.axes)
+        return replay.ReplayState(
+            {k: data for k in state.storage}, P(), P())
+
+    # ---- shard_map body: local state in, local state out
+    def add(self, state, traj):
+        return self.local.add(state, traj)
+
+    def sample(self, state: replay.ReplayState, key
+               ) -> Dict[str, jnp.ndarray]:
+        d = self.num_shards
+        b = self.batch_size
+        my = shard_index(self.axes)
+        size = jnp.maximum(state.size, 1)          # replicated (symmetric)
+        # one replicated draw over the D*size global slots; D=1 reduces
+        # bitwise to replay.sample_indices
+        draw = jax.random.randint(key, (b,), 0, d * size)
+        owner = draw // size
+        loc = draw % size
+        rows = ring_gather(state.storage, loc)
+        rows = _assemble(rows, owner == my, self.axes)
+        bl = b // d
+        batch = {k: _my_slice(v, my, bl) for k, v in rows.items()}
+        batch["indices"] = _my_slice(draw, my, bl)
+        batch["weights"] = jnp.ones((bl,), jnp.float32)
+        return batch
+
+    def update_priorities(self, state, indices, priorities):
+        return state
+
+
+# ====================================================== prioritized shards
+class ShardedPrioritizedBuffer:
+    """Per-shard sum-trees with a psum'd global root (module docstring)."""
+
+    name = "prioritized"
+    kind = "transitions"
+    passthrough = False
+
+    def __init__(self, inner: PrioritizedBuffer, num_shards: int,
+                 axes: Tuple[str, ...]):
+        if num_shards & (num_shards - 1):
+            raise ValueError(
+                f"prioritized replay shards over a power-of-two learner "
+                f"count (got {num_shards}) so each shard's tree is a "
+                f"complete subtree of the reference")
+        if inner.capacity % num_shards:
+            raise ValueError(
+                f"buffer capacity {inner.capacity} must divide evenly "
+                f"over {num_shards} learner shards")
+        if inner.batch_size % num_shards:
+            raise ValueError(
+                f"buffer batch_size {inner.batch_size} must divide evenly "
+                f"over {num_shards} learner shards")
+        self.inner = inner
+        self.num_shards = int(num_shards)
+        self.axes = tuple(axes)
+        self.local_capacity = inner.capacity // num_shards
+        self.local = PrioritizedBuffer(
+            self.local_capacity, inner.batch_size, inner.n_step,
+            inner.gamma, inner.alpha, inner.beta, inner.eps)
+        self.batch_size = inner.batch_size
+
+    # ---- host side
+    def init(self, example) -> PrioritizedState:
+        local = self.local.init(example)
+        tile = lambda x: jnp.concatenate([x] * self.num_shards, axis=0)
+        ring = replay.ReplayState(jax.tree.map(tile, local.ring.storage),
+                                  local.ring.index, local.ring.size)
+        tree = SumTree(tuple(tile(lv) for lv in local.tree.levels))
+        return PrioritizedState(ring, tree, local.max_priority)
+
+    def state_spec(self, state: PrioritizedState) -> PrioritizedState:
+        data = P(self.axes)
+        ring = replay.ReplayState(
+            {k: data for k in state.ring.storage}, P(), P())
+        tree = SumTree(tuple(data for _ in state.tree.levels))
+        return PrioritizedState(ring, tree, P())
+
+    # ---- shard_map body
+    def add(self, state, traj):
+        # max_priority is replicated (updates are computed from the
+        # replicated all-gathered priorities), so entering new transitions
+        # at it needs no collective
+        return self.local.add(state, traj)
+
+    def sample(self, state: PrioritizedState, key
+               ) -> Dict[str, jnp.ndarray]:
+        d = self.num_shards
+        b = self.batch_size
+        local = self.local
+        my = shard_index(self.axes)
+        replay.ensure_nonempty(state.ring)
+        totals = gather_scalars(state.tree.total, my, d, self.axes)
+        t_tot = jnp.sum(totals)
+        prefix = jnp.cumsum(totals) - totals       # shard mass offsets P_s
+        off = prefix[my]
+        # the reference's stratified draw, replicated on every shard
+        u = (jnp.arange(b, dtype=jnp.float32)
+             + jax.random.uniform(key, (b,))) / b
+        m = u * t_tot
+        is_last = my == (d - 1)
+        owned = (m >= off) & ((m < off + totals[my]) | is_last)
+        # local descent on the mass relative to this shard's interval —
+        # exactly the tail of the global tree's root descent
+        idx = sumtree_find_batch(state.tree, jnp.maximum(m - off, 0.0))
+        idx = jnp.minimum(idx, jnp.maximum(state.ring.size, 1) - 1)
+        probs = state.tree.levels[0][idx] / jnp.maximum(t_tot, local.eps)
+        n_glob = (d * jnp.maximum(state.ring.size, 1)).astype(jnp.float32)
+        weights = (n_glob * jnp.maximum(probs, local.eps)) ** (-local.beta)
+
+        rows = ring_gather(state.ring.storage, idx)
+        rows = _assemble(rows, owned, self.axes)
+        w_all = jax.lax.psum(jnp.where(owned, weights, 0.0), self.axes)
+        idx_glob = my * self.local_capacity + idx
+        idx_all = jax.lax.psum(jnp.where(owned, idx_glob, 0), self.axes)
+
+        bl = b // d
+        batch = {k: _my_slice(v, my, bl) for k, v in rows.items()}
+        batch["indices"] = _my_slice(idx_all, my, bl)
+        batch["weights"] = _my_slice(w_all / jnp.max(w_all), my, bl)
+        return batch
+
+    def update_priorities(self, state: PrioritizedState, indices,
+                          priorities) -> PrioritizedState:
+        d = self.num_shards
+        local = self.local
+        my = shard_index(self.axes)
+        bl = indices.shape[0]
+        idx_all = gather_rows(indices, my, d, self.axes)
+        p_all = gather_rows(priorities, my, d, self.axes)
+        p = jnp.abs(p_all) + local.eps
+        owner = idx_all // self.local_capacity
+        tree = sumtree_update_masked(
+            state.tree, idx_all % self.local_capacity,
+            p ** local.alpha, owner == my)
+        return PrioritizedState(state.ring, tree,
+                                jnp.maximum(state.max_priority, jnp.max(p)))
+
+
+def shard_buffer(buffer, num_shards: int, axes: Tuple[str, ...]):
+    """Wrap a transitions buffer for the sharded learner (fifo/trajectory
+    buffers shard positionally and pass through unchanged)."""
+    if getattr(buffer, "kind", None) != "transitions":
+        return buffer
+    if isinstance(buffer, PrioritizedBuffer):
+        return ShardedPrioritizedBuffer(buffer, num_shards, axes)
+    if isinstance(buffer, UniformBuffer):
+        return ShardedUniformBuffer(buffer, num_shards, axes)
+    raise ValueError(
+        f"no sharded form for buffer {getattr(buffer, 'name', buffer)!r}")

@@ -78,6 +78,12 @@ class Schedule:
     #                                       VectorEnv batch with one carry —
     #                                       overrides the num_samplers ×
     #                                       global_batch split (DESIGN.md §7)
+    learner_devices: Optional[int] = None  # shard_map data-parallel learner
+    #                                       over D devices (None/1: the
+    #                                       single-device path, bitwise
+    #                                       unchanged — DESIGN.md §9)
+    learner_microbatches: int = 1         # gradient-accumulation slices per
+    #                                       (per-shard) batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +162,30 @@ def _resolve_buffer(spec: ExperimentSpec, algo):
     return buffer
 
 
+def _validate_learner(spec: ExperimentSpec, algo, sched: Schedule,
+                      devices: int, vector: bool):
+    """Shape/compatibility checks for the multi-device learner, eager and
+    pointed (the shard_map errors they preempt are cryptic)."""
+    if devices <= 1:
+        return
+    if not getattr(algo, "shardable", False):
+        raise ValueError(
+            f"algo {spec.algo!r} does not support learner_devices > 1 "
+            f"(shardable=False — its gradients bypass grad_sync)")
+    if spec.runtime == "async":
+        n = (sched.num_workers or sched.num_samplers
+             ) if spec.backend == "process" else sched.num_samplers
+        batch = sched.min_batches_per_update * (sched.global_batch // n)
+    elif vector:
+        batch = sched.env_batch
+    else:
+        batch = sched.global_batch
+    if batch % devices:
+        raise ValueError(
+            f"the learner-side batch ({batch}) must divide evenly over "
+            f"learner_devices={devices}")
+
+
 def _traj_zeros(rollout, params, carries):
     """Zeroed merged-trajectory pytree (the fifo buffer's storage shape),
     via ``eval_shape`` so no rollout actually runs."""
@@ -227,7 +257,22 @@ def build(spec: ExperimentSpec):
     kernels_mod.set_kernel_mode(spec.kernels)
     params, opt_state = algo.init(jax.random.PRNGKey(sched.seed), env)
     rollout = algo.make_rollout(env, sched.horizon)
-    train_step = make_train_step(algo, buffer)
+    learner_devices = int(sched.learner_devices or 1)
+    learner_micro = int(sched.learner_microbatches or 1)
+    if learner_devices > 1 or learner_micro > 1:
+        _validate_learner(spec, algo, sched, learner_devices, vector)
+        from repro.distributed.learner import ShardedLearner
+        learner = ShardedLearner(algo, buffer,
+                                 num_devices=learner_devices,
+                                 microbatches=learner_micro)
+        # the (possibly sharded) wrapper allocates the plane below —
+        # sharded ring/tree leaves tiled to global size
+        buffer = learner.buffer
+        train_step = learner.train_step
+    else:
+        # learner_devices in (None, 1): the historical single-device
+        # composition, untouched (the bitwise guarantee)
+        train_step = make_train_step(algo, buffer)
     plane_key = jax.random.fold_in(jax.random.PRNGKey(sched.seed),
                                    _PLANE_KEY_TAG)
 

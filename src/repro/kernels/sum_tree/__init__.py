@@ -9,6 +9,7 @@ from repro.kernels.sum_tree.ref import (  # noqa: F401
     sumtree_build,
     sumtree_find,
     sumtree_find_batch_ref,
+    sumtree_update_masked,
     sumtree_update_ref,
 )
 from repro.kernels.sum_tree.sum_tree_pallas import (  # noqa: F401

@@ -76,3 +76,29 @@ def sumtree_update_ref(tree: SumTree, idx: jnp.ndarray,
         levels[k + 1] = levels[k + 1].at[parent].set(sums)
         child = parent
     return SumTree(tuple(levels))
+
+
+def sumtree_update_masked(tree: SumTree, idx: jnp.ndarray,
+                          leaf_values: jnp.ndarray,
+                          mask: jnp.ndarray) -> SumTree:
+    """``sumtree_update_ref`` that only applies rows where ``mask`` is
+    True — the sharded-replay form, where every shard sees the full
+    (replicated) priority batch but owns only a slice of the leaves.
+
+    Masked-out rows scatter to index ``capacity`` with ``mode="drop"``
+    (silently discarded), then walk leaf 0's root path, whose parents are
+    recomputed from the post-scatter children — i.e. rewritten with the
+    values they already hold. With ``mask`` all-True this is elementwise
+    identical to ``sumtree_update_ref``.
+    """
+    cap = tree.levels[0].shape[0]
+    levels = list(tree.levels)
+    drop_idx = jnp.where(mask, idx, cap)
+    levels[0] = levels[0].at[drop_idx].set(leaf_values, mode="drop")
+    child = jnp.where(mask, idx, 0)
+    for k in range(len(levels) - 1):
+        parent = child // 2
+        sums = levels[k][2 * parent] + levels[k][2 * parent + 1]
+        levels[k + 1] = levels[k + 1].at[parent].set(sums)
+        child = parent
+    return SumTree(tuple(levels))

@@ -88,6 +88,8 @@ def spec_from_args(args) -> ExperimentSpec:
             chunk=args.chunk,
             num_workers=args.num_workers,
             env_batch=args.env_batch,
+            learner_devices=args.learner_devices,
+            learner_microbatches=args.learner_microbatches,
         ),
     )
 
@@ -192,6 +194,13 @@ def main() -> None:
                     help="off-policy buffers: learner minibatch size")
     ap.add_argument("--n-step", type=int, default=None,
                     help="off-policy buffers: n-step return horizon")
+    ap.add_argument("--learner-devices", type=int, default=None,
+                    help="shard the train step data-parallel over D "
+                         "devices (shard_map; 1/unset = the historical "
+                         "single-device path, bitwise unchanged)")
+    ap.add_argument("--learner-microbatches", type=int, default=1,
+                    help="gradient-accumulation slices per (per-shard) "
+                         "learner batch")
     ap.add_argument("--chunk", type=int, default=None,
                     help="fused backend: iterations per device dispatch "
                          "(default: all of --iterations in one chunk)")

@@ -1,0 +1,199 @@
+"""Multi-device learner plane (distributed/learner + grad_sync): the
+trace-time gradient-sync context, the experiment wiring, and D>1
+equivalence against the single-device path (subprocess — device fan-out
+must be fixed before jax initialises)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import experiment
+from repro.distributed import grad_sync
+from repro.experiment import ExperimentSpec, Schedule
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run(args, env=ENV, timeout=420):
+    return subprocess.run([sys.executable] + args, cwd=REPO, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+TINY = dict(num_samplers=2, global_batch=4, horizon=8, iterations=2, seed=0)
+
+
+def _tiny_spec(algo="ppo", **sched):
+    return ExperimentSpec(env="pendulum", algo=algo, backend="inline",
+                          runtime="sync", model={"hidden": 16},
+                          schedule=Schedule(**{**TINY, **sched}))
+
+
+def _final_params(spec, iterations=2):
+    runner = experiment.build(spec)
+    try:
+        runner.run(iterations)
+    finally:
+        runner.close()
+    return runner.params
+
+
+def _assert_trees_equal(a, b):
+    for xa, xb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def _toy():
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (3,)), "b": jnp.zeros(())}
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (8, 3)),
+             "y": jax.random.normal(jax.random.PRNGKey(2), (8,)),
+             # no leading batch dim: must pass through microbatch slicing
+             "rng": jax.random.PRNGKey(3)}
+    return params, batch
+
+
+# ================================================== grad_sync context unit
+def test_value_and_grad_outside_context_is_plain():
+    params, batch = _toy()
+    want = jax.value_and_grad(_loss)(params, batch)
+    got = grad_sync.value_and_grad(_loss, params, batch)
+    _assert_trees_equal(got, want)
+    assert grad_sync.active() is None
+    assert grad_sync.reduce_axes() is None
+
+
+def test_sync_is_noop_outside_context():
+    tree = {"a": jnp.ones((3,))}
+    assert grad_sync.sync(tree) is tree
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    params, batch = _toy()
+    _, g_ref = jax.value_and_grad(_loss)(params, batch)
+    with grad_sync.activate(None, 4):
+        loss, g = grad_sync.value_and_grad(_loss, params, batch)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(loss), float(_loss(params, batch)),
+                               rtol=1e-6)
+
+
+def test_microbatch_aux_concatenates_per_sample_leaves():
+    params, batch = _toy()
+
+    def loss_aux(p, b):
+        per = (b["x"] @ p["w"] + p["b"] - b["y"]) ** 2
+        return jnp.mean(per), per
+
+    (_, per_ref), _ = jax.value_and_grad(loss_aux, has_aux=True)(
+        params, batch)
+    with grad_sync.activate(None, 2):
+        (_, per), _ = grad_sync.value_and_grad(loss_aux, params, batch,
+                                               has_aux=True)
+    assert per.shape == per_ref.shape                     # (8,), not (2, 4)
+    np.testing.assert_allclose(np.asarray(per), np.asarray(per_ref),
+                               rtol=1e-6)
+
+
+def test_microbatch_divisibility_error():
+    params, batch = _toy()
+    with grad_sync.activate(None, 3):
+        with pytest.raises(ValueError, match="divisible"):
+            grad_sync.value_and_grad(_loss, params, batch)
+
+
+# ================================================= experiment.build wiring
+def test_learner_devices_1_is_legacy_bitwise():
+    base = _final_params(_tiny_spec())
+    gated = _final_params(_tiny_spec(learner_devices=1))
+    _assert_trees_equal(gated, base)
+
+
+def test_learner_microbatches_close_to_plain():
+    base = _final_params(_tiny_spec())
+    micro = _final_params(_tiny_spec(learner_microbatches=2))
+    for a, b in zip(jax.tree.leaves(micro), jax.tree.leaves(base)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_unshardable_algo_rejected():
+    with pytest.raises(ValueError, match="shard"):
+        experiment.build(_tiny_spec("trpo", learner_devices=2))
+
+
+def test_learner_devices_exceeding_host_raises_with_hint():
+    if len(jax.devices()) >= 16:
+        pytest.skip("host exposes enough devices")
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        experiment.build(_tiny_spec(learner_devices=16, global_batch=16))
+
+
+# ========================================== D=4 == D=1 equivalence (slow)
+@pytest.mark.slow
+def test_learner_d4_matches_d1():
+    """4 learner shards (8 forced host devices) reach the same final
+    params as the single-device path. ppo is tight (pmean'd gradients ==
+    full-batch gradients up to float reduction order); sac/ddpg carry the
+    DESIGN.md §9 documented tolerance — per-shard rings realize a
+    different (equally distributed) physical replay layout, so the
+    realized draws differ while following the same sampling law."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro import experiment
+from repro.experiment import ExperimentSpec, Schedule
+
+def final(algo, buffer, devices):
+    spec = ExperimentSpec(
+        env="pendulum", algo=algo, backend="inline", runtime="sync",
+        model={"hidden": 16}, buffer=buffer,
+        buffer_kwargs=({"capacity": 1024, "batch_size": 32}
+                       if buffer else {}),
+        schedule=Schedule(num_samplers=2, global_batch=8, horizon=8,
+                          seed=0, learner_devices=devices))
+    runner = experiment.build(spec)
+    try:
+        runner.run(3)
+    finally:
+        runner.close()
+    return runner.params
+
+for algo, buffer, tol in (("ppo", None, 1e-5),
+                          ("sac", "prioritized", 0.05),
+                          ("ddpg", "uniform", 0.05)):
+    p1 = final(algo, buffer, None)
+    p4 = final(algo, buffer, 4)
+    diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert diff < tol, f"{algo}: D4 diverged from D1 by {diff} (tol {tol})"
+    print(f"LEARNER_D4_OK {algo} {diff:.2e}")
+"""
+    r = _run(["-c", script], timeout=900)
+    assert r.stdout.count("LEARNER_D4_OK") == 3, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_train_cli_learner_devices():
+    env = dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = _run(["-m", "repro.launch.train", "--mode", "rl", "--env",
+              "cartpole", "--num-samplers", "2", "--global-batch", "8",
+              "--horizon", "8", "--iterations", "2",
+              "--learner-devices", "4"], env=env)
+    assert r.returncode == 0, r.stderr
+    lines = [json.loads(l) for l in r.stdout.strip().splitlines()
+             if l.startswith("{")]
+    assert len(lines) == 2 and lines[0]["samples"] == 8 * 8
