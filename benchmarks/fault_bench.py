@@ -1,0 +1,119 @@
+"""The robustness row: throughput under injected faults + recovery latency.
+
+Quantifies what the supervised actor fleet (DESIGN.md §10) costs and
+buys. Two measurements land in ``BENCH_<rev>.json`` via
+``benchmarks/run.py --sections fault``:
+
+* ``fault_ppo_kill<rate>`` — lock-step process-backend PPO with workers
+  SIGKILLed on a seeded schedule at per-step probability
+  rate ∈ ``KILL_RATES`` (0 = the supervised-but-quiet baseline). The
+  metric is end-to-end ``samples_per_sec`` — supervision overhead at
+  rate 0, degradation-under-churn at the others — plus the observed
+  ``respawns``.
+* ``fault_recovery`` — median supervisor recovery latency
+  (``recovery_ms``: detect a SIGKILLed worker, reclaim its ring slots,
+  respawn, worker ready) over the respawns the killed runs performed.
+
+Both are driven through the public spec (``faults="kill:<rate>"``), so
+the numbers measure the shipped path: heartbeat sweep + result-timeout
+detection, slot reclamation, spec-respawn with backoff.
+
+``recovery_ms`` is judged lower-is-better by ``run.py --compare`` (the
+``_ms`` suffix rule); ``samples_per_sec`` rows gate like every other
+throughput row.
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, Sequence
+
+from benchmarks.common import emit
+
+KILL_RATES: Sequence[float] = (0.0, 0.1, 0.3)
+
+
+def _chaos_run(rate: float, iterations: int, seed: int = 3):
+    """One supervised lock-step process run; returns (logs, supervisor)."""
+    from repro import experiment
+    from repro.experiment import ExperimentSpec, Schedule
+
+    spec = ExperimentSpec(
+        env="pendulum", algo="ppo", backend="process", runtime="sync",
+        model={"hidden": 64},
+        faults=f"kill:{rate}" if rate else None,
+        schedule=Schedule(num_samplers=2, global_batch=8, horizon=32,
+                          iterations=iterations, seed=seed,
+                          max_respawns=max(8, iterations * 2)))
+    runner = experiment.build(spec)
+    try:
+        logs = runner.run(iterations)
+    finally:
+        runner.close()
+    return logs, runner.backend.supervisor
+
+
+def sweep_kill(rates: Sequence[float] = KILL_RATES, iterations: int = 6,
+               warmup: int = 1) -> Dict[float, float]:
+    """samples/sec at each kill rate, plus pooled recovery latency."""
+    out: Dict[float, float] = {}
+    recoveries = []
+    for rate in rates:
+        logs, sup = _chaos_run(rate, iterations)
+        steady = logs[warmup:]
+        secs = sum(log.collect_time for log in steady)
+        samples = sum(log.samples for log in steady)
+        sps = samples / secs if secs else 0.0
+        respawns = sup.respawns if sup is not None else 0
+        if sup is not None:
+            recoveries.extend(sup.recovery_s)
+        out[rate] = sps
+        emit(f"fault_ppo_kill{rate:g}", secs / max(samples, 1) * 1e6,
+             f"samples_per_sec={sps:.0f} respawns={respawns} "
+             f"kill_rate={rate:g}")
+    if recoveries:
+        med = statistics.median(recoveries)
+        emit("fault_recovery", med * 1e6,
+             f"recovery_ms={med * 1e3:.0f} n_respawns={len(recoveries)}")
+    return out
+
+
+def async_chaos(rate: float = 0.1, iterations: int = 6, seed: int = 3):
+    """The free-run analogue: async DDPG draining the ring while workers
+    are killed and respawned mid-stream — experiences/sec under churn."""
+    import time
+
+    from repro import experiment
+    from repro.experiment import ExperimentSpec, Schedule
+
+    spec = ExperimentSpec(
+        env="pendulum", algo="ddpg", backend="process", runtime="async",
+        model={"hidden": 64},
+        faults=f"kill:{rate}" if rate else None,
+        buffer_kwargs={"capacity": 4096, "batch_size": 64},
+        schedule=Schedule(num_samplers=2, global_batch=8, horizon=32,
+                          iterations=iterations, seed=seed,
+                          max_respawns=max(8, iterations * 2)))
+    runner = experiment.build(spec)
+    t0 = time.perf_counter()
+    try:
+        logs = runner.run(iterations)
+    finally:
+        runner.close()
+    wall = time.perf_counter() - t0
+    samples = sum(log.samples for log in logs)
+    sps = samples / wall if wall else 0.0
+    respawns = logs[-1].respawns if logs else 0
+    emit(f"fault_ddpg_async_kill{rate:g}", wall / max(samples, 1) * 1e6,
+         f"samples_per_sec={sps:.0f} respawns={respawns} kill_rate={rate:g}")
+    return sps
+
+
+def run_all() -> Dict[float, float]:
+    out = sweep_kill()
+    async_chaos()
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run_all()

@@ -55,9 +55,9 @@ import time
 
 
 def _sections():
-    from benchmarks import env_step_bench, fig_parallel, fused_vs_stepped, \
-        kernel_bench, learner_scaling, replay_bench, roofline, \
-        sampler_scaling, serving_bench
+    from benchmarks import env_step_bench, fault_bench, fig_parallel, \
+        fused_vs_stepped, kernel_bench, learner_scaling, replay_bench, \
+        roofline, sampler_scaling, serving_bench
     return {
         "fig": fig_parallel.run_all,
         "fused": fused_vs_stepped.run_all,
@@ -66,6 +66,7 @@ def _sections():
         "learner": learner_scaling.run_all,
         "env_step": env_step_bench.run_all,
         "serving": serving_bench.run_all,
+        "fault": fault_bench.run_all,
         "kernels_lm": kernel_bench.run_lm,
         "kernels_rl": kernel_bench.run_rl,
         "roofline": roofline.main,
@@ -132,8 +133,9 @@ def compare(old_path: str, new_path: str, threshold: float) -> int:
     """Diff the benchmark rows two BENCH reports share.
 
     Prints one line per (row, metric) with old/new values and the percent
-    delta. ``us_per_call`` is lower-is-better; ``*_per_sec`` metrics are
-    higher-is-better; everything else is informational. Returns the
+    delta. ``us_per_call`` and latency metrics (``*_ms`` — e.g. the fault
+    section's ``recovery_ms``) are lower-is-better; ``*_per_sec`` metrics
+    are higher-is-better; everything else is informational. Returns the
     number of metrics that regressed by more than ``threshold`` percent.
     """
     old, old_rev = _load_records(old_path)
@@ -155,7 +157,9 @@ def compare(old_path: str, new_path: str, threshold: float) -> int:
             if not o:
                 continue
             delta = (n - o) / abs(o) * 100.0
-            judged = higher_better or metric == "us_per_call"
+            lower_better = (metric == "us_per_call"
+                            or metric.endswith("_ms"))
+            judged = higher_better or lower_better
             regressed = judged and (
                 -delta > threshold if higher_better else delta > threshold)
             verdict = ("REGRESSED" if regressed

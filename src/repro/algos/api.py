@@ -46,6 +46,8 @@ import jax.numpy as jnp
 from repro import registry
 from repro.algos.ddpg import DDPGConfig, ddpg_update, explore_action, init_ddpg
 from repro.algos.ppo import PPOConfig, make_mlp_learner
+from repro.algos.staleness import STALENESS_OFF, StalenessConfig
+from repro.algos.staleness import decay_weights as _decay_weights
 from repro.algos.trpo import TRPOConfig, make_trpo_learner
 from repro.core import sampler as sampler_mod
 from repro.models import mlp_policy
@@ -85,6 +87,25 @@ class AlgorithmBase:
     # ``learn`` routes every gradient through ``grad_sync.value_and_grad``
     # (TRPO's conjugate-gradient line search does not, so it opts out)
     shardable = True
+    # importance-weighted staleness correction (algos/staleness.py): the
+    # algorithm can consume the async runtime's per-trajectory params-
+    # version gap and down-weight stale experience. Off (an inert config)
+    # unless the experiment enables it through ``enable_staleness``.
+    supports_staleness = False
+    staleness: StalenessConfig = STALENESS_OFF
+
+    def enable_staleness(self, cfg) -> None:
+        """Install a staleness-correction config (mode string / dict /
+        ``StalenessConfig``). A disabled config is always accepted (and
+        is a no-op); an enabled one requires ``supports_staleness``."""
+        cfg = StalenessConfig.parse(cfg)
+        if cfg.enabled and not self.supports_staleness:
+            raise ValueError(
+                f"algorithm {self.name!r} does not support staleness "
+                f"correction (supports_staleness=False) — its update has "
+                f"no importance-weighting seam; use staleness mode 'off' "
+                f"or a supporting algorithm (ppo, ddpg, sac)")
+        self.staleness = cfg
 
     def make_rollout(self, env, horizon: int):
         return sampler_mod.make_algo_rollout(self, env, horizon)
@@ -106,7 +127,15 @@ class OffPolicyAlgorithm(AlgorithmBase):
     """Shared plane wiring for replay-based learners (DDPG, SAC):
     full transitions recorded at collect time, a transition-schema hook
     for buffer allocation, and per-update learner RNG threaded through
-    the sampled batch as ``batch["rng"]``."""
+    the sampled batch as ``batch["rng"]``.
+
+    Staleness correction (when enabled): the per-trajectory
+    params-version gap is converted to a per-transition weight at
+    *ingest* time (``observe`` — the gap is fixed once the transition
+    enters replay), stored alongside the transition, and multiplied
+    into the buffer's importance weights at ``sample`` time; DDPG/SAC
+    critic losses already honor ``batch["weights"]``. Disabled, none of
+    these keys exist and the plane is byte-identical to before."""
 
     on_policy = False
     needs_next_obs = True
@@ -114,20 +143,37 @@ class OffPolicyAlgorithm(AlgorithmBase):
     updates_per_collect = 4
     step_keys = ("obs", "actions", "rewards", "dones", "next_obs")
     tail_keys: Tuple[str, ...] = ()
+    supports_staleness = True
 
     def transition_example(self, env) -> Dict[str, jnp.ndarray]:
         """One zeroed transition — the storage schema buffers allocate."""
-        return {
+        ex = {
             "obs": jnp.zeros((1, env.obs_dim)),
             "actions": jnp.zeros((1, env.act_dim)),
             "rewards": jnp.zeros((1,)),
             "next_obs": jnp.zeros((1, env.obs_dim)),
             "dones": jnp.zeros((1,), bool),
         }
+        if self.staleness.enabled:
+            ex["staleness_w"] = jnp.zeros((1,))
+        return ex
+
+    def observe(self, buffer, state, traj):
+        if self.staleness.enabled:
+            traj = dict(traj)
+            gap = traj.pop("staleness_gap", None)
+            traj["staleness_w"] = (
+                jnp.ones_like(traj["rewards"], dtype=jnp.float32)
+                if gap is None           # lock-step paths record no gap
+                else _decay_weights(self.staleness, gap))
+        return buffer.add(state, traj)
 
     def sample(self, buffer, state, key):
         k_buf, k_learn = jax.random.split(key)
         batch = buffer.sample(state, k_buf)
+        if "staleness_w" in batch:
+            sw = batch.pop("staleness_w")
+            batch["weights"] = batch.get("weights", 1.0) * sw
         batch["rng"] = k_learn          # stochastic learners (SAC) draw here
         return batch
 
@@ -223,12 +269,19 @@ class PPOAlgorithm(GaussianMLPAlgorithm):
     """Clipped-surrogate PPO with the paper's Gaussian-MLP policy."""
 
     name = "ppo"
+    supports_staleness = True
 
     def __init__(self, lr: float = 3e-4, hidden: int = 64, **cfg_kwargs):
         self.cfg = PPOConfig(lr=lr, **cfg_kwargs)
         self.hidden = hidden
         self._opt = adam(self.cfg.lr)
         self._learn = make_mlp_learner(self._opt, self.cfg)
+
+    def enable_staleness(self, cfg) -> None:
+        super().enable_staleness(cfg)
+        if self.staleness.enabled:      # weighted advantage path
+            self._learn = make_mlp_learner(self._opt, self.cfg,
+                                           staleness=self.staleness)
 
     def init(self, key, env):
         params = self._init_policy(key, env)

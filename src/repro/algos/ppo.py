@@ -43,11 +43,22 @@ def clipped_surrogate(logp, behavior_logp, adv, clip_eps) -> jnp.ndarray:
 
 # ============================================================ MLP policy PPO
 def mlp_ppo_loss(params, batch: Dict[str, jnp.ndarray], cfg: PPOConfig):
+    """Clipped-surrogate loss; an optional per-sample ``weights`` key
+    (staleness correction, DESIGN.md §10) scales both the surrogate and
+    the value error. Without the key the math is the historical,
+    bitwise-stable computation — the key's mere absence IS the exact-off
+    guarantee, so nothing here may touch the no-weights path."""
     logp = mlp_policy.action_logp(params, batch["obs"], batch["actions"])
-    pg = jnp.mean(clipped_surrogate(logp, batch["behavior_logp"],
-                                    batch["advantages"], cfg.clip_eps))
+    surrogate = clipped_surrogate(logp, batch["behavior_logp"],
+                                  batch["advantages"], cfg.clip_eps)
     v = mlp_policy.value_apply(params, batch["obs"])
-    v_loss = 0.5 * jnp.mean((v - batch["returns"]) ** 2)
+    w = batch.get("weights")
+    if w is None:
+        pg = jnp.mean(surrogate)
+        v_loss = 0.5 * jnp.mean((v - batch["returns"]) ** 2)
+    else:
+        pg = jnp.mean(w * surrogate)
+        v_loss = 0.5 * jnp.mean(w * (v - batch["returns"]) ** 2)
     ent = mlp_policy.entropy(params)
     loss = pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
     metrics = {"loss": loss, "pg_loss": pg, "v_loss": v_loss, "entropy": ent,
@@ -78,8 +89,18 @@ def mlp_ppo_update(params, opt_state, batch, cfg: PPOConfig, optimizer):
     return params, opt_state, jax.tree.map(jnp.mean, metrics)
 
 
-def make_mlp_learner(optimizer, cfg: PPOConfig):
-    """jit-ready multi-epoch PPO update from a trajectory batch."""
+def make_mlp_learner(optimizer, cfg: PPOConfig, staleness=None):
+    """jit-ready multi-epoch PPO update from a trajectory batch.
+
+    ``staleness`` (an enabled ``algos.staleness.StalenessConfig``) turns
+    on importance-weighted staleness correction for the advantage path:
+    each sample is weighted by ``decay ** staleness_gap`` (the
+    params-version gap the async runtime stamps onto the trajectory) —
+    and, in ``vtrace`` mode, additionally by the truncated importance
+    ratio ``min(rho_clip, pi_now / pi_behavior)`` under stop-gradient.
+    With ``staleness`` disabled or no gap recorded (every lock-step
+    path), no ``weights`` key is built and the computation is the
+    historical one, bitwise."""
 
     def learn(params, opt_state, traj: Dict[str, jnp.ndarray]):
         # traj arrays: (T, B, ...) time-major from the sampler
@@ -93,6 +114,17 @@ def make_mlp_learner(optimizer, cfg: PPOConfig):
             "advantages": gae_mod.normalize(adv),
             "returns": ret,
         }
+        if (staleness is not None and staleness.enabled
+                and "staleness_gap" in traj):
+            from repro.algos import staleness as staleness_mod
+            w = staleness_mod.decay_weights(staleness,
+                                            traj["staleness_gap"])
+            if staleness.mode == "vtrace":
+                logp_now = mlp_policy.action_logp(
+                    params, traj["obs"], traj["actions"])
+                w = w * staleness_mod.vtrace_rho(staleness, logp_now,
+                                                 traj["logp"])
+            batch["weights"] = jax.lax.stop_gradient(w)
         flat = jax.tree.map(
             lambda x: x.reshape((-1,) + x.shape[2:]), batch)
 

@@ -1,0 +1,107 @@
+"""Importance-weighted staleness correction (DESIGN.md §10).
+
+Free-running workers act with whatever params version the channel last
+published, so by the time the learner consumes a trajectory it may be
+``gap = learner_version - acted_with_version`` updates stale. Parallel
+Q-Learning (PAPERS.md) shows mixing data of varying staleness works when
+it is *corrected for*; this module is that correction as a composable
+hook, keyed off the params-version gap the shared-memory ring already
+records per trajectory.
+
+Two modes on top of ``off`` (the default — a no-op that preserves every
+bitwise guarantee):
+
+* ``decay``  — geometric down-weighting: ``w = decay ** gap``. Applies
+  to any learner; for off-policy replay the weight is computed at
+  *ingest* time (the gap is known when the transition enters the
+  buffer) and multiplies the buffer's importance weights at sample
+  time.
+* ``vtrace`` — for PPO's advantage path: the decay weight times the
+  V-trace-style truncated importance ratio
+  ``rho = min(rho_clip, pi_now(a|s) / pi_behavior(a|s))`` evaluated
+  under stop-gradient, so stale actions the current policy would no
+  longer take stop steering the update (Espeholt et al., 2018). The
+  replay path has no behavior logp, so ``vtrace`` degrades to ``decay``
+  there.
+
+The correction is **exact-off by default**: with ``mode="off"`` (or in
+lock-step mode, where the gap is identically zero and no gap key is ever
+attached) no trajectory key is added, no loss term changes, and the
+ppo×inline / process==inline / fused==stepped parity guarantees hold
+bitwise.
+
+Plumbing: ``AsyncOrchestrator`` attaches the per-trajectory gap as a
+``(T, B)`` float32 ``"staleness_gap"`` leaf before merging;
+``algos.api`` routes it into the PPO loss (``make_mlp_learner``) or into
+replay ingest (``OffPolicyAlgorithm.observe`` -> ``staleness_w`` ->
+``batch["weights"]``). Algorithms opt in via ``supports_staleness`` /
+``enable_staleness`` (PPO, DDPG, SAC; TRPO's line search does not).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Union
+
+MODES = ("off", "decay", "vtrace")
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """How stale experience is down-weighted (plain data, spec-friendly)."""
+
+    mode: str = "off"
+    decay: float = 0.9          # geometric weight per version of staleness
+    rho_clip: float = 1.0       # vtrace: truncation of the importance ratio
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown staleness mode {self.mode!r}; choose from {MODES}")
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"staleness decay={self.decay} must be in "
+                             f"(0, 1]")
+        if self.rho_clip <= 0.0:
+            raise ValueError(f"rho_clip={self.rho_clip} must be > 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def parse(cls, value: Union[None, str, Dict[str, Any],
+                                "StalenessConfig"]) -> "StalenessConfig":
+        """Normalize the spec-level field: None / a mode string / a kwargs
+        dict / an existing config all resolve to one ``StalenessConfig``."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls(mode=value)
+        return cls(**dict(value))
+
+
+STALENESS_OFF = StalenessConfig()
+
+GAP_KEY = "staleness_gap"       # (T, B) f32 versions-behind, runner-attached
+WEIGHT_KEY = "staleness_w"      # per-transition weight stored in replay
+
+
+def decay_weights(cfg: StalenessConfig, gap):
+    """``decay ** gap`` as float32 — the geometric down-weighting shared
+    by both modes (jittable; ``gap`` is a float array of versions
+    behind)."""
+    import jax.numpy as jnp
+    return jnp.asarray(cfg.decay, jnp.float32) ** gap.astype(jnp.float32)
+
+
+def vtrace_rho(cfg: StalenessConfig, logp_now, behavior_logp):
+    """Truncated importance ratio ``min(rho_clip, exp(logp_now - mu))``
+    under stop-gradient — the V-trace correction factor (jittable)."""
+    import jax
+    import jax.numpy as jnp
+    ratio = jnp.exp(jax.lax.stop_gradient(logp_now) - behavior_logp)
+    return jnp.minimum(jnp.asarray(cfg.rho_clip, jnp.float32), ratio)

@@ -48,6 +48,8 @@ class CollectStats:
     """Per-iteration collection accounting shared by every backend."""
     per_sampler_seconds: List[float]
     samples: int
+    respawns: int = 0        # cumulative supervised worker respawns
+    active_workers: int = 0  # live fleet size (process backend only)
 
     @property
     def critical_path(self) -> float:
@@ -191,27 +193,41 @@ class ProcessBackend(BackendCloseMixin):
     pickle per worker); trajectories come back through the shared-memory
     ring and merge **in worker-index order**, so with matched per-worker
     seeds the merged trajectory is exactly the inline backend's
-    (DESIGN.md §6). Worker death or an in-worker exception surfaces as
-    ``ipc.WorkerCrashed`` from ``collect``; ``close`` reaps everything.
+    (DESIGN.md §6). With a ``supervisor`` attached (the default through
+    ``repro.experiment``), a worker that dies mid-sweep is respawned
+    from its ``WorkerSpec`` and its command re-issued instead of killing
+    the run; without one, worker death or an in-worker exception
+    surfaces as ``ipc.WorkerCrashed`` from ``collect``. ``close`` reaps
+    everything.
     """
 
-    def __init__(self, pool):
+    def __init__(self, pool, supervisor=None):
         self.pool = pool
-        self.num_samplers = pool.num_workers
+        self.supervisor = supervisor
         # command workers one at a time instead of broadcasting: on hosts
         # with fewer cores than workers this removes peer preemption from
         # the per-worker timings (see ProcessWorkerPool.collect) — the
         # benchmark harness flips it for steady-state measurement
         self.staggered = False
 
+    @property
+    def num_samplers(self) -> int:
+        return self.pool.num_workers
+
     def collect(self, params):
         self.pool.publish(params)
-        trajs, times, _loops = self.pool.collect(staggered=self.staggered)
+        source = self.supervisor if self.supervisor is not None else self.pool
+        trajs, times, _loops = source.collect(staggered=self.staggered)
         merged = merge_trajs(trajs)
-        return merged, CollectStats(times, trajectory.num_samples(merged))
+        return merged, CollectStats(
+            times, trajectory.num_samples(merged),
+            respawns=(self.supervisor.respawns if self.supervisor else 0),
+            active_workers=self.pool.num_workers)
 
     def close(self) -> None:
-        self.pool.close()
+        # supervised pools tolerate worker death by design — don't let a
+        # fault landing after the final collect resurface from close()
+        self.pool.close(raise_on_crash=self.supervisor is None)
 
 
 def _build_inline(*, rollout: Callable, carries: List[Any], **_ignored):
@@ -264,30 +280,42 @@ def _build_sharded(*, carries: List[Any], env=None,
 
 def build_worker_pool(*, rollout: Callable, carries: List[Any],
                       worker_specs: Sequence[Any], params: Any,
-                      slots_per_worker: int = 1):
+                      slots_per_worker: int = 1,
+                      active_workers: Optional[Sequence[int]] = None,
+                      fault_plan=None):
     """Spawn a ``ProcessWorkerPool`` for ``worker_specs``.
 
     ``rollout``/``carries`` are the *parent-side* builds of the same spec
     — used only under ``eval_shape`` to size the shared-memory ring (no
-    rollout runs here); ``params`` sizes the params channel.
+    rollout runs here); ``params`` sizes the params channel. The pool is
+    provisioned for all ``worker_specs`` but only ``active_workers``
+    (default: all) start — the elastic headroom a supervisor grows into.
     """
     from repro.core import ipc
     traj_example = jax.eval_shape(
         lambda p, c: rollout(p, c)[1], params, carries[0])
     return ipc.ProcessWorkerPool(worker_specs, params, traj_example,
-                                 slots_per_worker=slots_per_worker)
+                                 slots_per_worker=slots_per_worker,
+                                 active_workers=active_workers,
+                                 fault_plan=fault_plan)
 
 
 def _build_process(*, rollout: Callable, carries: List[Any],
                    worker_specs: Optional[Sequence[Any]] = None,
-                   params: Any = None, **_ignored):
+                   params: Any = None, fault_plan=None,
+                   supervisor_cfg=None, **_ignored):
     assert worker_specs is not None and params is not None, (
         "the process backend is built from serializable WorkerSpecs plus "
         "the learner's params (to size the shared-memory channel); "
         "construct it through repro.experiment (backend='process')")
-    return ProcessBackend(build_worker_pool(
+    pool = build_worker_pool(
         rollout=rollout, carries=carries, worker_specs=worker_specs,
-        params=params, slots_per_worker=1))
+        params=params, slots_per_worker=1, fault_plan=fault_plan)
+    supervisor = None
+    if supervisor_cfg is None or supervisor_cfg.max_respawns > 0:
+        from repro.core.supervisor import WorkerSupervisor
+        supervisor = WorkerSupervisor(pool, supervisor_cfg)
+    return ProcessBackend(pool, supervisor=supervisor)
 
 
 registry.register("backend", "inline", _build_inline)

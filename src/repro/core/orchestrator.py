@@ -51,6 +51,8 @@ class IterationLog:
                                       # actually rolling out (vs waiting on
                                       # params/slots); < 1 only measurable
                                       # for free-running process workers
+    respawns: int = 0            # cumulative supervised worker respawns
+    active_workers: int = 0      # pool size this iteration (elastic mode)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -80,7 +82,9 @@ def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
                  learn_time: float, merged, samples: Optional[int] = None,
                  staleness: float = 0.0,
                  queue_drops: int = 0,
-                 worker_utilization: float = 1.0) -> IterationLog:
+                 worker_utilization: float = 1.0,
+                 respawns: int = 0,
+                 active_workers: int = 0) -> IterationLog:
     """The single definition of per-iteration accounting (sync + async)."""
     return IterationLog(
         iteration=iteration,
@@ -93,6 +97,8 @@ def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
         staleness=staleness,
         queue_drops=queue_drops,
         worker_utilization=worker_utilization,
+        respawns=respawns,
+        active_workers=active_workers,
     )
 
 
@@ -161,7 +167,9 @@ class SyncRunner(BackendCloseMixin):
                     self.learn, self.params, self.opt_state, merged)
             record_log(self.logs, self.timer,
                        assemble_log(it, stats.per_sampler_seconds,
-                                    learn_time, merged, stats.samples))
+                                    learn_time, merged, stats.samples,
+                                    respawns=stats.respawns,
+                                    active_workers=stats.active_workers))
         return self.logs
 
     def close(self) -> None:
@@ -190,7 +198,16 @@ class AsyncOrchestrator(BackendCloseMixin):
     per update, no pickling), backpressure is the ring itself (a worker
     blocks once its slots are unconsumed — nothing is dropped), and
     ``IterationLog`` additionally reports ``worker_utilization`` (rollout
-    time / worker loop wall time, cumulative).
+    time / worker loop wall time, windowed per iteration).
+
+    Robustness (DESIGN.md §10): pass ``supervisor=`` (a
+    ``core.supervisor.WorkerSupervisor`` over the same pool) and worker
+    death/hangs are detected and respawned mid-run instead of killing
+    the learner, with ``autoscale`` nudging the fleet size against the
+    utilization band between updates. Pass ``staleness=`` (an enabled
+    ``algos.staleness.StalenessConfig``) and every consumed trajectory
+    is stamped with its params-version gap for the algo-side
+    importance-weighted correction; disabled (default) attaches nothing.
     """
 
     def __init__(self, rollout: Optional[Callable],
@@ -199,8 +216,11 @@ class AsyncOrchestrator(BackendCloseMixin):
                  num_samplers: int, min_batches_per_update: int = 1,
                  queue_size: int = 64, *,
                  train_step: Optional[Callable] = None,
-                 plane_state: Any = None, pool=None):
+                 plane_state: Any = None, pool=None,
+                 supervisor=None, staleness=None):
         self.pool = pool
+        self.supervisor = supervisor      # core.supervisor.WorkerSupervisor
+        self.staleness = staleness        # algos.staleness.StalenessConfig
         if pool is None:
             assert rollout is not None and carries is not None
             self.rollout = jax.jit(rollout)
@@ -221,15 +241,22 @@ class AsyncOrchestrator(BackendCloseMixin):
         self.timer = PhaseTimer()
         self.logs: List[IterationLog] = []
         self._stop = threading.Event()
-        # pool mode: cumulative staleness / utilization accounting (the
-        # thread path keeps its history inside ExperienceQueue)
-        self._staleness: List[float] = []
-        self._collect_s = 0.0
-        self._loop_s = 0.0
 
     @property
     def buffer_state(self):
         return None if self.plane_state is None else self.plane_state[0]
+
+    def _attach_gap(self, traj, gap: float, np_mod):
+        """Stamp the params-version gap onto every timestep of one
+        trajectory (a (T, B) float32 leaf keyed ``staleness_gap``) so the
+        algo-side correction can weight it after merging. Only called
+        when staleness correction is enabled — with it off no key is
+        added and every bitwise-parity guarantee is untouched."""
+        ref = traj["rewards"]
+        traj = dict(traj)
+        traj["staleness_gap"] = np_mod.full(
+            ref.shape[:2], float(max(0.0, gap)), dtype="float32")
+        return traj
 
     # ------------------------------------------------------------ threads
     def _sampler_loop(self, i: int) -> None:
@@ -258,7 +285,14 @@ class AsyncOrchestrator(BackendCloseMixin):
             if self._stop.is_set() and not exps:
                 return
             wait = time.perf_counter() - t_wait0
-            merged = merge_trajs([e.traj for e in exps])
+            if self.staleness is not None and self.staleness.enabled:
+                import jax.numpy as jnp
+                trajs = [self._attach_gap(
+                    e.traj, self.store.version - e.policy_version, jnp)
+                    for e in exps]
+            else:
+                trajs = [e.traj for e in exps]
+            merged = merge_trajs(trajs)
             params, _ = self.store.read()
             if self._train_step is not None:
                 (params, self.opt_state, self.plane_state, _,
@@ -280,29 +314,45 @@ class AsyncOrchestrator(BackendCloseMixin):
     def _learner_loop_pool(self, updates: int, deadline: float) -> None:
         """Drain the shared-memory ring while worker processes free-run.
         Returns early (like the thread path's learner join) once
-        ``deadline`` passes with workers alive but unproductive."""
+        ``deadline`` passes with workers alive but unproductive.
+
+        Accounting is *windowed per iteration* (not cumulative over the
+        run): ``staleness`` and ``worker_utilization`` reflect only the
+        experiences consumed for *this* update, so the log tracks the
+        live fleet — a worker dying and being respawned mid-run shows up
+        in that iteration's numbers instead of being averaged away over
+        the whole history. With a supervisor attached, draining,
+        failure handling and (between iterations) elastic resizing all
+        route through it."""
+        import numpy as _np
         it0 = len(self.logs)
+        source = self.supervisor if self.supervisor is not None else self.pool
+        stale_on = self.staleness is not None and self.staleness.enabled
         for it in range(updates):
-            exps = []
+            exps, gaps = [], []
+            collect_s = loop_s = 0.0         # this iteration's window only
             t_wait0 = time.perf_counter()
             while len(exps) < self.min_batches and not self._stop.is_set():
                 if time.monotonic() > deadline:
                     return
-                got = self.pool.next_experience(timeout=1.0)
+                got = source.next_experience(timeout=1.0)
                 if got is None:
                     continue
-                exp, loop_s = got
+                exp, loop_dt = got
                 exps.append(exp)
-                self._collect_s += exp.collect_seconds
-                self._loop_s += loop_s
-                self._staleness.append(
-                    self.pool.version - exp.policy_version)
+                collect_s += exp.collect_seconds
+                loop_s += loop_dt
+                gaps.append(max(0, self.pool.version - exp.policy_version))
             if self._stop.is_set() and not exps:
                 return
             wait = time.perf_counter() - t_wait0
+            trajs = [e.traj for e in exps]
+            if stale_on:
+                trajs = [self._attach_gap(t, g, _np)
+                         for t, g in zip(trajs, gaps)]
             merged = merge_trajs(
-                [{k: jax.numpy.asarray(v) for k, v in e.traj.items()}
-                 for e in exps])
+                [{k: jax.numpy.asarray(v) for k, v in t.items()}
+                 for t in trajs])
             params, _ = self.store.read()
             if self._train_step is not None:
                 (params, self.opt_state, self.plane_state, _,
@@ -314,16 +364,19 @@ class AsyncOrchestrator(BackendCloseMixin):
                     self.learn, params, self.opt_state, merged)
             self.store.publish(params)
             self.pool.publish(params)
-            util = (self._collect_s / self._loop_s
-                    if self._loop_s > 0 else 1.0)
+            util = collect_s / loop_s if loop_s > 0 else 1.0
             record_log(self.logs, self.timer,
                        assemble_log(it0 + it,
                                     [e.collect_seconds for e in exps],
                                     learn_time, merged,
-                                    staleness=(sum(self._staleness)
-                                               / len(self._staleness)),
-                                    worker_utilization=util))
+                                    staleness=float(sum(gaps) / len(gaps)),
+                                    worker_utilization=util,
+                                    respawns=(self.supervisor.respawns
+                                              if self.supervisor else 0),
+                                    active_workers=self.pool.num_workers))
             self.timer.add("collect_wait", wait)
+            if self.supervisor is not None:
+                self.supervisor.autoscale(util)
 
     # ---------------------------------------------------------------- run
     def run(self, updates: int, timeout: float = 600.0) -> List[IterationLog]:
@@ -350,10 +403,16 @@ class AsyncOrchestrator(BackendCloseMixin):
         return self.logs
 
     def close(self) -> None:
-        """Stop sampler threads / reap worker processes (idempotent)."""
+        """Stop sampler threads / reap worker processes (idempotent).
+
+        With a supervisor attached, worker death is a tolerated,
+        recovered-from event — a fault or crash landing between the last
+        drained experience and shutdown must not resurface as a spurious
+        ``WorkerCrashed`` from ``close``.
+        """
         self._stop.set()
         if self.pool is not None:
-            self.pool.close()
+            self.pool.close(raise_on_crash=self.supervisor is None)
 
     @property
     def params(self):

@@ -118,6 +118,8 @@ def nstep_transitions(traj: Dict[str, jnp.ndarray], n_step: int,
         "next_obs": traj["next_obs"][n_step - 1:n_step - 1 + Tn],
         "discounts": (gamma ** n_step) * notdone,
     }
+    if "staleness_w" in traj:       # per-transition staleness weight rides
+        out["staleness_w"] = traj["staleness_w"][:Tn]   # its start step
     return {k: v.reshape((-1,) + v.shape[2:]) for k, v in out.items()}
 
 

@@ -84,6 +84,17 @@ class Schedule:
     #                                       unchanged — DESIGN.md §9)
     learner_microbatches: int = 1         # gradient-accumulation slices per
     #                                       (per-shard) batch
+    max_respawns: int = 3                 # process backend: crash-loop
+    #                                       budget per worker (consecutive
+    #                                       failures before the run fails;
+    #                                       0 disables supervision entirely
+    #                                       — DESIGN.md §10)
+    min_workers: Optional[int] = None     # async process: elastic fleet
+    max_workers: Optional[int] = None     # floor/ceiling; setting either
+    #                                       enables utilization-band
+    #                                       autoscaling (the pool is
+    #                                       provisioned to max_workers,
+    #                                       starts at num_workers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +115,25 @@ class ExperimentSpec:
     env_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     buffer_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    staleness: Optional[Any] = None       # staleness correction for async
+    #                                       learning: a mode name
+    #                                       ("decay"/"vtrace"), a dict, or a
+    #                                       StalenessConfig; None/"off"
+    #                                       keeps the historical bitwise
+    #                                       path (DESIGN.md §10)
+    faults: Optional[str] = None          # fault-injection schedule for
+    #                                       process workers, e.g.
+    #                                       "kill:0.2,torn:0.05" —
+    #                                       deterministic per (seed, worker,
+    #                                       incarnation, step)
+
+    def __post_init__(self):
+        # normalize StalenessConfig to its dict form so to_dict/from_dict
+        # round-trips through plain data (specs must serialize losslessly)
+        if dataclasses.is_dataclass(self.staleness) and not isinstance(
+                self.staleness, type):
+            object.__setattr__(self, "staleness",
+                               self.staleness.to_dict())
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -225,8 +255,27 @@ def build(spec: ExperimentSpec):
             f"(backend='threaded') or worker processes collecting into "
             f"the shared-memory ring (backend='process'); got "
             f"{spec.backend!r}")
+    from repro.algos.staleness import StalenessConfig
+    stale_cfg = StalenessConfig.parse(spec.staleness)
+    if stale_cfg.enabled and spec.runtime != "async":
+        raise ValueError(
+            f"staleness correction reweights samples by the params-version "
+            f"gap the async runtime stamps onto experience; under "
+            f"runtime={spec.runtime!r} that gap is identically zero — use "
+            f"runtime='async' or staleness='off'")
+    if spec.faults and spec.backend != "process":
+        raise ValueError(
+            f"fault injection kills/hangs worker *processes*; backend must "
+            f"be 'process' (got {spec.backend!r})")
     env = registry.make("env", spec.env, **dict(spec.env_kwargs))
     sched = spec.schedule
+    if ((sched.min_workers is not None or sched.max_workers is not None)
+            and not (spec.runtime == "async"
+                     and spec.backend == "process")):
+        raise ValueError(
+            "elastic sizing (schedule.min_workers/max_workers) grows and "
+            "shrinks a free-running worker-process fleet; it requires "
+            "runtime='async' with backend='process'")
     vector = sched.env_batch is not None
     if vector:
         # vector collection: the whole batch is ONE device-resident
@@ -244,6 +293,9 @@ def build(spec: ExperimentSpec):
         env = VectorEnv(env, sched.env_batch)
     algo = registry.make("algo", spec.algo,
                          **{**dict(spec.model), **dict(spec.algo_kwargs)})
+    # before buffer/train-step composition: transition_example and the
+    # composed learner both key off algo.staleness.enabled
+    algo.enable_staleness(stale_cfg)
     buffer = _resolve_buffer(spec, algo)
     # kernel-plane selection is read at trace time: set it after all
     # other validation (set_kernel_mode itself validates-then-mutates, so
@@ -311,36 +363,63 @@ def build(spec: ExperimentSpec):
         for i in range(n_samplers)
     ]
     extra: Dict[str, Any] = {}
+    sup_cfg = None
     if spec.backend == "process":
+        from repro.core.faults import FaultPlan
+        from repro.core.supervisor import SupervisorConfig
+        min_w = sched.min_workers if sched.min_workers is not None else 1
+        max_w = sched.max_workers if sched.max_workers is not None \
+            else n_samplers
+        if not (1 <= min_w <= n_samplers <= max_w):
+            raise ValueError(
+                f"elastic bounds must satisfy 1 <= min_workers({min_w}) "
+                f"<= num_workers({n_samplers}) <= max_workers({max_w})")
+        sup_cfg = SupervisorConfig(
+            max_respawns=sched.max_respawns,
+            min_workers=sched.min_workers, max_workers=sched.max_workers)
         worker_algo_kwargs = {**dict(spec.model), **dict(spec.algo_kwargs)}
         extra = {
             "params": params,
+            # specs (and ring slots) are provisioned for max_workers
+            # upfront; only the first n_samplers start — growth respawns
+            # a pre-sized spec, it never reallocates shared memory
             "worker_specs": [
                 sampler_mod.WorkerSpec(
                     env=spec.env, algo=spec.algo, horizon=sched.horizon,
                     batch=per, seed=sched.seed + i, kernels=spec.kernels,
                     env_kwargs=dict(spec.env_kwargs),
                     algo_kwargs=worker_algo_kwargs)
-                for i in range(n_samplers)
+                for i in range(max_w)
             ],
+            "fault_plan": FaultPlan.parse(spec.faults, seed=sched.seed)
+            if spec.faults else None,
         }
     if spec.runtime == "async":
         if spec.backend == "process":
             from repro.core.backends import build_worker_pool
+            from repro.core.supervisor import WorkerSupervisor
             # 2 slots per worker: one being drained, one being filled —
             # continuous collection without unbounded queueing
             pool = build_worker_pool(rollout=rollout, carries=carries,
-                                     slots_per_worker=2, **extra)
+                                     slots_per_worker=2,
+                                     active_workers=list(range(n_samplers)),
+                                     **extra)
+            supervisor = (WorkerSupervisor(pool, sup_cfg)
+                          if sup_cfg.max_respawns > 0 or sup_cfg.elastic
+                          else None)
             return AsyncOrchestrator(
                 None, None, params, opt_state, None, n_samplers,
                 min_batches_per_update=sched.min_batches_per_update,
                 train_step=train_step, plane_state=plane_for(carries),
-                pool=pool)
+                pool=pool, supervisor=supervisor, staleness=stale_cfg)
         return AsyncOrchestrator(
             rollout, None, params, opt_state, carries,
             n_samplers,
             min_batches_per_update=sched.min_batches_per_update,
-            train_step=train_step, plane_state=plane_for(carries))
+            train_step=train_step, plane_state=plane_for(carries),
+            staleness=stale_cfg)
+    if sup_cfg is not None:
+        extra["supervisor_cfg"] = sup_cfg
     backend = make_backend(spec.backend, rollout, carries,
                            env=env, horizon=sched.horizon,
                            step_keys=algo.step_keys,

@@ -22,7 +22,11 @@ Usage:
       [--num-workers 4]            # process backend: worker-process count \
       [--env-batch 1024]           # env plane: B-instance VectorEnv batch \
       [--buffer prioritized --replay-capacity 100000 --n-step 3] \
-      [--kernels {ref,pallas,auto}]   # kernel plane (DESIGN.md §5)
+      [--kernels {ref,pallas,auto}]   # kernel plane (DESIGN.md §5) \
+      [--inject-faults kill:0.2]   # chaos: process workers die on a \
+      [--max-respawns 8]           # seeded schedule and are respawned \
+      [--min-workers 2 --max-workers 8]  # async elastic fleet (§10) \
+      [--staleness decay]          # async staleness-corrected learning
   PYTHONPATH=src python -m repro.launch.train --mode lm \
       --arch mixtral-8x7b-reduced --steps 5
 """
@@ -69,6 +73,11 @@ def spec_from_args(args) -> ExperimentSpec:
         ("batch_size", args.replay_batch),
         ("n_step", args.n_step),
     ] if v is not None}
+    staleness = None
+    if args.staleness and args.staleness != "off":
+        staleness = {"mode": args.staleness}
+        if args.staleness_decay is not None:
+            staleness["decay"] = args.staleness_decay
     return ExperimentSpec(
         env=args.env,
         algo=args.algo,
@@ -79,6 +88,8 @@ def spec_from_args(args) -> ExperimentSpec:
         model={"hidden": args.hidden},
         algo_kwargs=algo_kwargs,
         buffer_kwargs=buffer_kwargs,
+        staleness=staleness,
+        faults=args.inject_faults,
         schedule=Schedule(
             num_samplers=args.num_samplers,
             global_batch=args.global_batch,
@@ -90,6 +101,9 @@ def spec_from_args(args) -> ExperimentSpec:
             env_batch=args.env_batch,
             learner_devices=args.learner_devices,
             learner_microbatches=args.learner_microbatches,
+            max_respawns=args.max_respawns,
+            min_workers=args.min_workers,
+            max_workers=args.max_workers,
         ),
     )
 
@@ -205,6 +219,35 @@ def main() -> None:
                     help="fused backend: iterations per device dispatch "
                          "(default: all of --iterations in one chunk)")
     ap.add_argument("--async", dest="async_mode", action="store_true")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="fault-injection schedule for process workers, "
+                         "e.g. 'kill:0.2,torn:0.05,delay:0.1:80' — "
+                         "per-step probabilities of SIGKILL / die-mid-"
+                         "write / hang / delay, deterministic per "
+                         "(seed, worker, incarnation, step); requires "
+                         "--backend process (DESIGN.md §10)")
+    ap.add_argument("--max-respawns", type=int, default=3,
+                    help="process backend: consecutive-failure budget "
+                         "per worker before the run fails (0 disables "
+                         "supervised respawn entirely)")
+    ap.add_argument("--min-workers", type=int, default=None,
+                    help="async process: elastic fleet floor — with "
+                         "--max-workers, enables utilization-band "
+                         "autoscaling between iterations")
+    ap.add_argument("--max-workers", type=int, default=None,
+                    help="async process: elastic fleet ceiling (the "
+                         "pool pre-provisions ring slots and WorkerSpecs "
+                         "up to this count; growth never reallocates)")
+    from repro.algos.staleness import MODES as STALENESS_MODES
+    ap.add_argument("--staleness", default="off",
+                    choices=STALENESS_MODES,
+                    help="async staleness correction: 'decay' weights "
+                         "samples by decay**version_gap; 'vtrace' also "
+                         "applies the truncated importance ratio "
+                         "min(rho_clip, pi_now/pi_behavior); 'off' is "
+                         "the historical bitwise path")
+    ap.add_argument("--staleness-decay", type=float, default=None,
+                    help="per-version-gap decay factor (default 0.9)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
     (run_rl if args.mode == "rl" else run_lm)(args)

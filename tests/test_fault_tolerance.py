@@ -1,0 +1,489 @@
+"""Fault tolerance (DESIGN.md §10): the fault-injection harness, the
+seqlock stuck-slot repair path, supervised respawn + crash-loop budget,
+per-iteration accounting under churn, shutdown-crash exception chaining,
+elastic autoscaling, and the staleness-correction exact-off guarantee."""
+import multiprocessing as mp
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import experiment
+from repro.algos.staleness import StalenessConfig, decay_weights, vtrace_rho
+from repro.core.faults import KINDS, FaultPlan, decide
+from repro.core.ipc import RingSlotStuck, ShmRing, WorkerCrashed
+from repro.core.ipc import Heartbeat
+from repro.core.supervisor import SupervisorConfig, WorkerSupervisor
+from repro.experiment import ExperimentSpec, Schedule
+
+TINY = dict(num_samplers=2, global_batch=4, horizon=8, iterations=2, seed=0)
+
+
+def _spec(backend, algo="ppo", runtime="sync", staleness=None, faults=None,
+          buffer_kwargs=None, **sched):
+    return ExperimentSpec(env="pendulum", algo=algo, backend=backend,
+                          runtime=runtime, model={"hidden": 16},
+                          staleness=staleness, faults=faults,
+                          buffer_kwargs=buffer_kwargs or {},
+                          schedule=Schedule(**{**TINY, **sched}))
+
+
+# ============================================================== fault plan
+def test_fault_plan_parse_and_roundtrip():
+    plan = FaultPlan.parse("kill:0.2,torn:0.05,delay:0.1:80,seed:7")
+    assert (plan.kill, plan.torn, plan.delay, plan.delay_ms, plan.seed) == \
+        (0.2, 0.05, 0.1, 80.0, 7)
+    assert plan.any
+    assert FaultPlan.from_dict(plan.to_dict()) == plan
+    assert not FaultPlan().any
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("explode:0.5")
+    with pytest.raises(ValueError, match="probabilit"):
+        FaultPlan(kill=1.5)
+
+
+def test_fault_decide_deterministic_and_incarnation_keyed():
+    plan = FaultPlan.parse("kill:0.3", seed=0)
+    draws = [decide(plan, 0, 1, s) for s in range(64)]
+    assert draws == [decide(plan, 0, 1, s) for s in range(64)]  # pure
+    assert "kill" in draws                # fires at this rate over 64 steps
+    assert all(d in (None,) + KINDS for d in draws)
+    # a respawned worker draws a fresh (still deterministic) schedule
+    assert draws != [decide(plan, 0, 2, s) for s in range(64)]
+    # a zero-rate plan never fires
+    off = FaultPlan()
+    assert all(decide(off, 0, 1, s) is None for s in range(64))
+
+
+# ================================================= stuck-slot repair (ring)
+def _ring_example():
+    return {"obs": np.zeros((4, 3), np.float32),
+            "rewards": np.zeros((4,), np.float32)}
+
+
+def test_ring_read_timeout_names_slot_writer_and_state():
+    ring = ShmRing.create(_ring_example(), slots=2, prefix=f"ft-{os.getpid()}-a")
+    try:
+        ring.begin_torn_write(1, worker_id=3)        # seq odd, never finishes
+        with pytest.raises(RingSlotStuck, match=r"slot 1.*write in progress"
+                           ) as ei:
+            ring.read(1, timeout=0.2)
+        err = ei.value
+        assert (err.slot, err.worker_id) == (1, 3)
+        assert err.writer_pid == os.getpid()
+        assert err.seq % 2 == 1
+        assert str(err.writer_pid) in str(err)       # message names the pid
+        assert isinstance(err, WorkerCrashed)
+    finally:
+        ring.close(unlink=True)
+
+
+def test_ring_reclaim_torn_unread_and_free():
+    ring = ShmRing.create(_ring_example(), slots=3, prefix=f"ft-{os.getpid()}-b")
+    try:
+        ring.begin_torn_write(0, worker_id=1)
+        assert ring.reclaim(0) == "torn"
+        assert ring.is_free(0)                       # writable again
+        traj = {k: np.ones_like(v) for k, v in _ring_example().items()}
+        ring.write(1, traj, worker_id=1, policy_version=1,
+                   collect_seconds=0.0, loop_seconds=0.0)
+        assert ring.reclaim(1) == "unread"           # orphaned stable write
+        assert ring.is_free(1)
+        assert ring.reclaim(2) is None               # untouched slot
+        # a reclaimed-torn slot accepts a fresh write and reads clean
+        seq = ring.write(0, traj, worker_id=2, policy_version=5,
+                         collect_seconds=0.0, loop_seconds=0.0)
+        out, meta = ring.read(0)
+        np.testing.assert_array_equal(out["obs"], traj["obs"])
+        assert meta["worker_id"] == 2 and ring.seq(0) == seq
+    finally:
+        ring.close(unlink=True)
+
+
+def _torn_writer_child(ring_spec, slot, wid):
+    """Attach, start a write, and die mid-write — the real failure mode."""
+    from repro.core.ipc import ShmRing
+    ring = ShmRing.attach(ring_spec)
+    ring.begin_torn_write(slot, wid)
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def test_sigkilled_writer_mid_write_regression():
+    """Regression (satellite a): a producer SIGKILLed mid-write used to
+    hang the consumer forever; now read() raises a pointed RingSlotStuck
+    naming the dead writer, and reclaim() repairs the slot."""
+    ring = ShmRing.create(_ring_example(), slots=1, prefix=f"ft-{os.getpid()}-c")
+    try:
+        ctx = mp.get_context("spawn")
+        p = ctx.Process(target=_torn_writer_child, args=(ring.spec, 0, 9))
+        p.start()
+        p.join(timeout=60)
+        assert p.exitcode == -signal.SIGKILL
+        with pytest.raises(RingSlotStuck) as ei:
+            ring.read(0, timeout=0.3)
+        assert ei.value.writer_pid == p.pid          # the dead writer, named
+        assert ei.value.worker_id == 9
+        assert ring.reclaim(0) == "torn"
+        assert ring.is_free(0)
+    finally:
+        ring.close(unlink=True)
+
+
+def test_heartbeat_ages_cross_attach():
+    hb = Heartbeat(f"ft-hb-{os.getpid()}", slots=3, create=True)
+    try:
+        assert hb.age(0) == float("inf")             # never beaten
+        hb.beat(0)
+        assert hb.age(0) < 5.0
+        other = Heartbeat(hb.name)                   # attach side
+        assert other.age(0) < 5.0 and other.age(1) == float("inf")
+        other.close()
+    finally:
+        hb.close(unlink=True)
+
+
+# ==================================================== supervised lock-step
+def test_supervised_collect_respawns_after_kill():
+    """Chaos acceptance, lock-step: SIGKILL a worker mid-run; collection
+    completes, the worker is respawned under a fresh incarnation, and no
+    trajectory is lost or double-consumed."""
+    runner = experiment.build(_spec("process", max_respawns=3))
+    try:
+        sup = runner.backend.supervisor
+        assert sup is not None                       # supervision default ON
+        pool = runner.backend.pool
+        _, s0 = runner.backend.collect(runner.params)    # healthy sweep
+        pool._procs[0].kill()                            # SIGKILL mid-idle
+        pool._procs[0].join(timeout=30)
+        merged, s1 = runner.backend.collect(runner.params)
+        assert sup.respawns == 1
+        assert pool._incarnation[0] == 2
+        assert s1.respawns == 1 and s1.active_workers == 2
+        assert s1.samples == s0.samples              # nothing lost
+        assert len(sup.recovery_s) == 1 and sup.recovery_s[0] > 0
+        # next sweep runs clean on the respawned fleet, budget reset
+        runner.backend.collect(runner.params)
+        assert sup._consec[0] == 0
+    finally:
+        runner.close()
+
+
+def test_crash_loop_budget_exhausts_with_pointed_error():
+    runner = experiment.build(_spec("process", max_respawns=0))
+    assert runner.backend.supervisor is None         # 0 disables supervision
+    runner.close()
+    # budget=1: first death respawns, a stubborn second one raises
+    runner = experiment.build(_spec("process", max_respawns=1))
+    sup = runner.backend.supervisor
+    try:
+        with pytest.raises(WorkerCrashed, match="crash-looping"):
+            for _ in range(3):
+                sup._respawn(1, "test-injected failure")
+        assert sup.respawns == 1                     # one respawn, then budget
+        assert 1 in runner.backend.pool._crash_surfaced
+    finally:
+        runner.close()                               # must not re-raise
+
+
+def test_lockstep_chaos_run_completes_with_respawns():
+    """Deterministic chaos: kill:0.3 at seed 0 SIGKILLs both workers
+    within their first three rollouts (verified against the plan here),
+    and the supervised run still completes every iteration."""
+    plan = FaultPlan.parse("kill:0.3", seed=0)
+    first_kill = [min(s for s in range(8)
+                      if decide(plan, w, 1, s) == "kill") for w in (0, 1)]
+    assert max(first_kill) < 4                       # fires inside the run
+    res = experiment.run(_spec("process", faults="kill:0.3", iterations=4,
+                               max_respawns=8))
+    logs = res.logs
+    assert len(logs) == 4
+    assert logs[-1].respawns >= 2                    # both workers died
+    assert all(log.samples == TINY["global_batch"] * TINY["horizon"]
+               for log in logs)                      # exactly-once, no loss
+    assert all(log.active_workers == 2 for log in logs)
+
+
+def test_torn_fault_reclaimed_in_lockstep():
+    """A worker that dies *mid-ring-write* (torn seqlock) is detected,
+    its slot repaired, and the sweep re-issued — the consumer never
+    hangs and never sees torn payload."""
+    plan = FaultPlan.parse("torn:0.3", seed=0)
+    firsts = [min(s for s in range(8)
+                  if decide(plan, w, 1, s) == "torn") for w in (0, 1)]
+    assert min(firsts) < 4
+    res = experiment.run(_spec("process", faults="torn:0.3", iterations=4,
+                               max_respawns=8))
+    assert len(res.logs) == 4
+    assert res.logs[-1].respawns >= 1
+    assert all(log.samples == TINY["global_batch"] * TINY["horizon"]
+               for log in res.logs)
+
+
+# =========================================================== async free-run
+def test_async_chaos_completes_with_respawns():
+    """Chaos acceptance, pool mode: free-running workers SIGKILLed on a
+    seeded schedule; the learner keeps draining, the supervisor respawns,
+    training completes all iterations."""
+    plan = FaultPlan.parse("kill:0.3", seed=0)
+    firsts = [min(s for s in range(8)
+                  if decide(plan, w, 1, s) == "kill") for w in (0, 1)]
+    assert min(firsts) <= 2                          # dies almost immediately
+    res = experiment.run(_spec("process", runtime="async", faults="kill:0.3",
+                               iterations=5, max_respawns=12))
+    logs = res.logs
+    assert len(logs) == 5
+    assert logs[-1].respawns >= 1
+    assert all(log.samples > 0 for log in logs)
+    assert all(log.staleness >= 0.0 for log in logs)
+    procs = res.runner.pool._procs
+    assert all(p is None or not p.is_alive() for p in procs)
+
+
+# ========================================= accounting under churn (stubbed)
+class _StubPool:
+    """Scripted stand-in for ProcessWorkerPool: hands the orchestrator a
+    fixed sequence of (policy_version, collect_s, loop_s) experiences so
+    the per-iteration accounting is checked against exact numbers."""
+
+    def __init__(self, script, version=10):
+        from repro.core.queues import Experience
+        self.version = version
+        self.num_workers = 2
+        self._exps = [
+            (Experience(traj={"obs": np.zeros((4, 2, 3), np.float32),
+                              "rewards": np.zeros((4, 2), np.float32),
+                              "dones": np.zeros((4, 2), np.float32)},
+                        policy_version=v, sampler_id=0, collect_seconds=c),
+             loop)
+            for v, c, loop in script]
+        self._i = 0
+
+    def start_freerun(self):
+        pass
+
+    def publish(self, params):
+        self.version += 1
+
+    def next_experience(self, timeout=1.0):
+        if self._i >= len(self._exps):
+            return None
+        exp = self._exps[self._i]
+        self._i += 1
+        return exp
+
+    def close(self, raise_on_crash=True):
+        pass
+
+
+def test_pool_accounting_is_windowed_per_iteration():
+    """Satellite: staleness / worker_utilization are *this* iteration's
+    window, not a cumulative average — a gap-5 batch after a gap-0 batch
+    logs staleness 5.0 (not 2.5), and utilization tracks each window."""
+    from repro.core.orchestrator import AsyncOrchestrator
+
+    # iteration 1: version gap 10-10=0, util 0.5/1.0; publish -> version 11
+    # iteration 2: gap 11-6=5, util 0.25/1.0
+    pool = _StubPool([(10, 0.5, 1.0), (6, 0.25, 1.0)], version=10)
+    params = {"w": jnp.zeros((2,))}
+
+    def train_step(p, o, s, batch):
+        return p, o, s, {"loss": jnp.mean(batch["rewards"])}
+
+    orch = AsyncOrchestrator(None, None, params, None, None, 2,
+                             min_batches_per_update=1,
+                             train_step=train_step, plane_state=(),
+                             pool=pool)
+    logs = orch.run(2, timeout=30.0)
+    assert len(logs) == 2
+    assert logs[0].staleness == 0.0
+    assert logs[1].staleness == 5.0                  # windowed, not averaged
+    assert logs[0].worker_utilization == pytest.approx(0.5)
+    assert logs[1].worker_utilization == pytest.approx(0.25)
+    assert all(log.active_workers == 2 for log in logs)
+    assert all(log.respawns == 0 for log in logs)    # no supervisor attached
+
+
+# ======================================================= shutdown ordering
+def test_close_does_not_mask_crash_raised_first():
+    """Ordering A (satellite b): the crash surfaces from collect; close()
+    running afterwards (the ``finally``) must re-raise nothing — the
+    original exception, not a shutdown error, reaches the caller."""
+    runner = experiment.build(_spec("process", max_respawns=0))
+    pool = runner.backend.pool
+    with pytest.raises(WorkerCrashed, match="died") as ei:
+        try:
+            runner.backend.collect(runner.params)            # healthy
+            pool._procs[0].kill()
+            pool._procs[0].join(timeout=30)
+            runner.backend.collect(runner.params)            # raises "died"
+        finally:
+            runner.close()                      # must not mask or re-raise
+    assert "shutdown" not in str(ei.value)
+
+
+def test_close_surfaces_crash_during_shutdown():
+    """Ordering B: no exception in flight, a worker found dead at close()
+    time raises WorkerCrashed naming the shutdown phase."""
+    runner = experiment.build(_spec("process", max_respawns=0))
+    pool = runner.backend.pool
+    runner.backend.collect(runner.params)
+    pool._procs[1].kill()
+    pool._procs[1].join(timeout=30)
+    with pytest.raises(WorkerCrashed, match="crashed during shutdown"):
+        pool.close()
+    pool.close()                                     # idempotent afterwards
+
+
+# ================================================================ elastic
+class _ElasticStubPool:
+    def __init__(self, active=2, max_workers=4):
+        self.active = list(range(active))
+        self.max_workers = max_workers
+
+    def grow(self):
+        wid = len(self.active)
+        self.active.append(wid)
+        return wid
+
+    def shrink(self):
+        return self.active.pop() if len(self.active) > 1 else None
+
+
+def test_autoscale_band_cooldown_and_clamps():
+    pool = _ElasticStubPool(active=2, max_workers=4)
+    sup = WorkerSupervisor(pool, SupervisorConfig(
+        min_workers=2, max_workers=3, resize_cooldown=1))
+    assert sup.autoscale(0.95) == ("grow", 2)        # above band -> grow
+    assert sup.autoscale(0.95) is None               # cooldown gates
+    assert sup.autoscale(0.95) is None               # ceiling (3) clamps
+    assert len(pool.active) == 3
+    assert sup.autoscale(0.7) is None                # inside the band
+    assert sup.autoscale(0.1) == ("shrink", 2)
+    assert sup.autoscale(0.1) is None                # cooldown again
+    assert sup.autoscale(0.1) is None                # floor (2) clamps
+    assert len(pool.active) == 2
+    assert [e.kind for e in sup.events] == ["grow", "shrink"]
+    # elastic off: never resizes
+    off = WorkerSupervisor(_ElasticStubPool(), SupervisorConfig())
+    assert off.autoscale(0.99) is None and off.autoscale(0.0) is None
+
+
+def test_async_elastic_pool_grows_within_bounds():
+    """End-to-end: an async run provisioned to max_workers=3 starts at 2
+    and stays within [1, 3] while autoscaling between iterations."""
+    res = experiment.run(_spec("process", runtime="async", iterations=4,
+                               min_workers=1, max_workers=3))
+    actives = [log.active_workers for log in res.logs]
+    assert actives[0] == 2                           # starts at num_samplers
+    assert all(1 <= a <= 3 for a in actives)
+    assert res.runner.pool.max_workers == 3          # provisioned upfront
+
+
+# ============================================== staleness: math + exact-off
+def test_staleness_config_parse_and_validation():
+    assert not StalenessConfig.parse(None).enabled
+    assert not StalenessConfig.parse("off").enabled
+    cfg = StalenessConfig.parse("decay")
+    assert cfg.mode == "decay" and cfg.enabled
+    cfg = StalenessConfig.parse({"mode": "vtrace", "decay": 0.8})
+    assert (cfg.mode, cfg.decay) == ("vtrace", 0.8)
+    assert StalenessConfig.parse(cfg) is cfg
+    with pytest.raises(ValueError, match="mode"):
+        StalenessConfig(mode="banana")
+    with pytest.raises(ValueError, match="decay"):
+        StalenessConfig(mode="decay", decay=1.5)
+
+
+def test_staleness_weight_math():
+    cfg = StalenessConfig(mode="decay", decay=0.5)
+    gap = jnp.asarray([0.0, 1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(decay_weights(cfg, gap)),
+                               [1.0, 0.5, 0.125])
+    rho = vtrace_rho(StalenessConfig(mode="vtrace", rho_clip=1.0),
+                     jnp.asarray([0.0, 0.0]), jnp.asarray([-1.0, 1.0]))
+    # exp(0-(-1))=e clipped to 1; exp(0-1)=1/e kept
+    np.testing.assert_allclose(np.asarray(rho), [1.0, np.exp(-1.0)],
+                               rtol=1e-6)
+
+
+def test_ppo_loss_exact_off_is_bitwise():
+    """The exact-off guarantee: with correction disabled no ``weights``
+    key exists and the loss path is the historical computation bitwise;
+    a learner built with staleness but fed gap-free trajectories is
+    bitwise identical too."""
+    from repro.algos.ppo import PPOConfig, make_mlp_learner, mlp_ppo_loss
+    from repro.models import mlp_policy
+    from repro.optim import adam
+
+    key = jax.random.PRNGKey(0)
+    params = mlp_policy.init_policy(key, 3, 1, hidden=16)
+    B = 8
+    batch = {
+        "obs": jax.random.normal(key, (B, 3)),
+        "actions": jax.random.normal(key, (B, 1)),
+        "behavior_logp": jax.random.normal(key, (B,)),
+        "advantages": jax.random.normal(key, (B,)),
+        "returns": jax.random.normal(key, (B,)),
+    }
+    cfg = PPOConfig()
+    loss_off, _ = mlp_ppo_loss(params, batch, cfg)
+    loss_w1, _ = mlp_ppo_loss(params, {**batch,
+                                       "weights": jnp.ones((B,))}, cfg)
+    assert np.asarray(loss_off) == np.asarray(loss_w1)   # w=1 is exact
+
+    traj = {
+        "obs": jax.random.normal(key, (4, 2, 3)),
+        "actions": jax.random.normal(key, (4, 2, 1)),
+        "logp": jax.random.normal(key, (4, 2)),
+        "rewards": jax.random.normal(key, (4, 2)),
+        "dones": jnp.zeros((4, 2)),
+        "values": jax.random.normal(key, (4, 2)),
+        "last_value": jax.random.normal(key, (2,)),
+    }
+    opt = adam(3e-4)
+    opt_state = opt.init(params)
+    plain = make_mlp_learner(opt, cfg)
+    stale = make_mlp_learner(opt, cfg,
+                             staleness=StalenessConfig(mode="decay"))
+    p1, _, m1 = jax.jit(plain)(params, opt_state, traj)
+    p2, _, m2 = jax.jit(stale)(params, opt_state, traj)  # no gap key
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.asarray(m1["loss"]) == np.asarray(m2["loss"])
+
+
+def test_offpolicy_staleness_weights_ride_the_buffer():
+    """Enabled off-policy staleness stores an ingest-time weight per
+    transition; disabled, the storage schema is unchanged (the exact-off
+    guarantee is the key's absence)."""
+    from repro import registry
+    env = registry.make("env", "pendulum")
+    algo = registry.make("algo", "ddpg", hidden=16)
+    ex_off = algo.transition_example(env)
+    assert "staleness_w" not in ex_off
+    algo.enable_staleness("decay")
+    ex_on = algo.transition_example(env)
+    assert "staleness_w" in ex_on
+
+
+def test_enable_staleness_rejects_unsupported_algo():
+    from repro import registry
+    algo = registry.make("algo", "trpo", hidden=16)
+    with pytest.raises(ValueError, match="trpo"):
+        algo.enable_staleness("decay")
+    algo.enable_staleness("off")                     # off is always fine
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="async"):
+        experiment.build(_spec("inline", staleness="decay"))
+    with pytest.raises(ValueError, match="process"):
+        experiment.build(_spec("inline", faults="kill:0.2"))
+    with pytest.raises(ValueError, match="elastic"):
+        experiment.build(_spec("inline", max_workers=4))
+    with pytest.raises(ValueError, match="min_workers"):
+        experiment.build(_spec("process", runtime="async",
+                               min_workers=3, max_workers=4))

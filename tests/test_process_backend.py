@@ -145,8 +145,12 @@ def test_num_workers_overrides_num_samplers():
 
 # ====================================================== crash + lifecycle
 def test_worker_crash_surfaces_with_worker_id():
-    runner = experiment.build(_spec("process", num_samplers=2))
+    """With supervision disabled (max_respawns=0), worker death surfaces
+    as WorkerCrashed from collect — the pre-supervisor contract."""
+    runner = experiment.build(_spec("process", num_samplers=2,
+                                    max_respawns=0))
     try:
+        assert runner.backend.supervisor is None
         runner.backend.collect(runner.params)        # healthy first sweep
         runner.backend.pool._procs[0].terminate()
         runner.backend.pool._procs[0].join(timeout=10)
