@@ -93,12 +93,32 @@ def _git_rev() -> str:
         return "unknown"
 
 
-def write_report(out_dir: str, sections) -> str:
+def check_dirty_overwrite(out_dir: str, rev: str, force: bool) -> None:
+    """Refuse to land a ``-dirty`` report next to its clean-rev sibling.
+
+    A dirty tree's numbers describe unfinished work; writing
+    ``BENCH_<rev>-dirty.json`` beside the committed ``BENCH_<rev>.json``
+    invites comparing (or worse, shipping) them as if they were the
+    recorded trajectory. ``--force`` overrides for local iteration.
+    """
+    if force or not rev.endswith("-dirty"):
+        return
+    clean = os.path.join(out_dir, f"BENCH_{rev[:-len('-dirty')]}.json")
+    if os.path.exists(clean):
+        sys.exit(
+            f"error: the tree is dirty but {clean} already records this "
+            f"rev from a clean tree; commit your changes (so the report "
+            f"lands under the new rev) or pass --force to write "
+            f"BENCH_{rev}.json anyway")
+
+
+def write_report(out_dir: str, sections, force: bool = False) -> str:
     """Serialize every emitted row (benchmarks.common.RECORDS) plus the
     run's config into ``<out_dir>/BENCH_<rev>.json``; returns the path."""
     import jax
 
     from benchmarks import common
+    check_dirty_overwrite(out_dir, _git_rev(), force)
     payload = {
         "rev": _git_rev(),
         "timestamp": datetime.datetime.now(
@@ -140,6 +160,11 @@ def compare(old_path: str, new_path: str, threshold: float) -> int:
     """
     old, old_rev = _load_records(old_path)
     new, new_rev = _load_records(new_path)
+    for side, rev in (("old", old_rev), ("new", new_rev)):
+        if rev.endswith("-dirty"):
+            print(f"# WARNING: {side} report {rev} was produced from a "
+                  f"dirty tree — its numbers may not match any commit",
+                  file=sys.stderr)
     shared = [n for n in new if n in old]
     only_old = sorted(set(old) - set(new))
     only_new = sorted(set(new) - set(old))
@@ -187,6 +212,11 @@ def main(argv=None) -> None:
                     help="--compare: percent drop in *_per_sec (or rise "
                          "in us_per_call) that counts as a regression "
                          "(default 10)")
+    ap.add_argument("--force", action="store_true",
+                    help="write BENCH_<rev>-dirty.json even when the "
+                         "clean-tree BENCH_<rev>.json already exists "
+                         "(local iteration only — dirty reports are not "
+                         "part of the recorded trajectory)")
     args = ap.parse_args(argv)
     if args.compare is not None:
         sys.exit(1 if compare(args.compare[0], args.compare[1],
@@ -195,11 +225,13 @@ def main(argv=None) -> None:
     unknown = [s for s in names if s not in table]
     if unknown:
         ap.error(f"unknown sections {unknown}; choose from {list(table)}")
+    # fail before benchmarks run, not after minutes of measurement
+    check_dirty_overwrite(args.out_dir, _git_rev(), args.force)
 
     print("name,us_per_call,derived")
     for name in names:
         table[name]()
-    path = write_report(args.out_dir, names)
+    path = write_report(args.out_dir, names, force=args.force)
     print(f"# wrote {path}")
 
 

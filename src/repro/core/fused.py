@@ -99,6 +99,16 @@ class FusedRunner(BackendCloseMixin):
     the point — so ``IterationLog.collect_time``/``collect_time_serial``
     are 0.0 and ``learn_time`` carries the whole fused iteration's share
     of the chunk's wall time (DESIGN.md §2).
+
+    ``overlap=True`` trades the single fused dispatch for a
+    double-buffered two-dispatch pipeline: collect and learn become
+    separate donated jits so iteration k+1's rollout executes while
+    iteration k's update runs on the learner mesh (DESIGN.md §11). The
+    scan ``chunk`` is ignored in this mode — the host must see the
+    collect/learn boundary to pipeline across it. Overlapped collects
+    act with params one update behind; the consuming iteration's log
+    stamps ``staleness=1.0`` and ``overlap_saved_s`` reports the learn
+    time hidden under the collect.
     """
 
     def __init__(self, env, learn: Optional[Callable], params: Any,
@@ -106,7 +116,8 @@ class FusedRunner(BackendCloseMixin):
                  chunk: Optional[int] = None,
                  rollout: Optional[Callable] = None,
                  train_step: Optional[Callable] = None,
-                 plane_state: Any = None):
+                 plane_state: Any = None,
+                 overlap: bool = False):
         assert learn is not None or train_step is not None
         self.env = env
         self.learn = learn
@@ -114,6 +125,11 @@ class FusedRunner(BackendCloseMixin):
         self.horizon = horizon
         self.chunk = chunk
         self.rollout = rollout
+        self.overlap = overlap
+        self._overlap_fns_cache = None
+        self._overlap_clock = None        # created on first overlapped run;
+        self._overlap_done = 0            # warmup is per-runner, not per
+        #                                   run() call
         # the chunk fn donates its input state; copy so the caller's
         # params/opt_state/carry/plane buffers survive the first dispatch
         self.state = jax.tree.map(
@@ -150,8 +166,105 @@ class FusedRunner(BackendCloseMixin):
                 rollout=self.rollout, train_step=self.train_step)
         return self._loops[chunk]
 
+    # ----------------------------------------------------------- overlap
+    def _overlap_fns(self):
+        """(collect_fn, learn_fn) for the pipelined mode.
+
+        ``collect_fn`` donates the env carry (serial chain); ``learn_fn``
+        donates opt_state / plane_state / the consumed trajectory —
+        params are NOT donated, the concurrent collect still reads
+        them — and computes ``mean_return`` inside the trace, before
+        the trajectory buffer is reclaimed for iteration k+2.
+        """
+        if self._overlap_fns_cache is not None:
+            return self._overlap_fns_cache
+        rollout = self.rollout or sampler_mod.make_env_rollout(
+            self.env, self.horizon)
+        train_step, learn = self.train_step, self.learn
+
+        def learn_body(params, opt_state, plane_state, traj):
+            if train_step is not None:
+                params, opt_state, plane_state, metrics = train_step(
+                    params, opt_state, plane_state, traj)
+            else:
+                params, opt_state, metrics = learn(params, opt_state, traj)
+            metrics = dict(metrics)
+            metrics["mean_return"] = trajectory.episode_returns(traj)
+            return params, opt_state, plane_state, metrics
+
+        self._overlap_fns_cache = (
+            jax.jit(rollout, donate_argnums=(1,)),
+            jax.jit(learn_body, donate_argnums=(1, 2, 3)))
+        return self._overlap_fns_cache
+
+    _OVERLAP_WARMUP = 2         # it 0 pays compilation, it 1 gives learn_ref
+
+    def _run_overlapped(self, iterations: int) -> List:
+        from repro.core.orchestrator import (
+            IterationLog, OverlapClock, record_log, tree_ready)
+        collect_fn, learn_fn = self._overlap_fns()
+        if self._overlap_clock is None:
+            self._overlap_clock = OverlapClock()
+        clock = self._overlap_clock
+        params, opt_state, env_carry, plane_state = self.state
+        done0 = len(self.logs)
+
+        t0 = time.perf_counter()
+        env_carry, traj = collect_fn(params, env_carry)
+        jax.block_until_ready(traj)
+        collect_dur = time.perf_counter() - t0      # prologue collect
+        stale = 0.0
+
+        for it in range(iterations):
+            data_dur, data_stale = collect_dur, stale
+            t0 = time.perf_counter()
+            out = learn_fn(params, opt_state, plane_state, traj)
+            traj = None
+            saved = 0.0
+            warm, self._overlap_done = (self._overlap_done,
+                                        self._overlap_done + 1)
+            if warm < self._OVERLAP_WARMUP:
+                # serial: block the learn, then collect with fresh params
+                jax.block_until_ready(out[0])
+                window = time.perf_counter() - t0
+                if warm > 0:        # iteration 0 includes compilation
+                    clock.note_serial(window)
+                params, opt_state, plane_state, metrics = out
+                if it + 1 < iterations:
+                    tc = time.perf_counter()
+                    env_carry, traj = collect_fn(params, env_carry)
+                    jax.block_until_ready(traj)
+                    collect_dur, stale = time.perf_counter() - tc, 0.0
+            else:
+                # pipelined: the collect acts with the pre-update params
+                # while the dispatched learn runs on the learner mesh
+                if it + 1 < iterations:
+                    tc = time.perf_counter()
+                    env_carry, traj = collect_fn(params, env_carry)
+                    jax.block_until_ready(traj)
+                    next_dur = time.perf_counter() - tc
+                    saved = clock.saved(next_dur, tree_ready(out[0]))
+                    collect_dur, stale = next_dur, 1.0
+                params, opt_state, plane_state, metrics = out
+                jax.block_until_ready(params)
+                window = time.perf_counter() - t0
+            record_log(self.logs, self.timer, IterationLog(
+                iteration=done0 + it,
+                collect_time=data_dur,
+                collect_time_serial=data_dur,
+                learn_time=max(0.0, window - saved),
+                mean_return=float(metrics["mean_return"]),
+                samples=self._samples_per_iter,
+                staleness=data_stale,
+                overlap_saved_s=saved,
+            ))
+        self.state = TrainState(params, opt_state, env_carry, plane_state)
+        return self.logs
+
     def run(self, iterations: int) -> List:
         from repro.core.orchestrator import IterationLog, record_log
+        if self.overlap:
+            return self._run_overlapped(iterations)
         done = 0
         while done < iterations:
             c = min(self.chunk or iterations, iterations - done)

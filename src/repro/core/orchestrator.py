@@ -53,12 +53,31 @@ class IterationLog:
                                       # for free-running process workers
     respawns: int = 0            # cumulative supervised worker respawns
     active_workers: int = 0      # pool size this iteration (elastic mode)
+    overlap_saved_s: float = 0.0  # overlap pipeline: wall-clock hidden by
+                                  # running this learn under the next
+                                  # collect, vs the serial schedule (0 on
+                                  # serial iterations; under overlap,
+                                  # learn_time is the *exposed* learn cost
+                                  # so collect+learn+saved ~= serial wall)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
 
 # ====================================================== shared helpers
+def _maybe_jit_step(train_step: Optional[Callable]) -> Optional[Callable]:
+    """Runners jit the plane step themselves — except a mesh step that
+    manages its own jit and input placement (``ShardedLearner`` with
+    D > 1 sets ``self_jitted``): re-jitting it would infer device
+    placement from the arguments, and a device-0 trajectory next to
+    FSDP-sharded params is an incompatible-devices error."""
+    if train_step is None:
+        return None
+    if getattr(getattr(train_step, "__self__", None), "self_jitted", False):
+        return train_step
+    return jax.jit(train_step)
+
+
 def timed_learn(learn: Callable, params, opt_state, merged):
     """One jitted learner update, blocked and timed."""
     t0 = time.perf_counter()
@@ -84,7 +103,8 @@ def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
                  queue_drops: int = 0,
                  worker_utilization: float = 1.0,
                  respawns: int = 0,
-                 active_workers: int = 0) -> IterationLog:
+                 active_workers: int = 0,
+                 overlap_saved_s: float = 0.0) -> IterationLog:
     """The single definition of per-iteration accounting (sync + async)."""
     return IterationLog(
         iteration=iteration,
@@ -99,7 +119,49 @@ def assemble_log(iteration: int, per_sampler_seconds: Sequence[float],
         worker_utilization=worker_utilization,
         respawns=respawns,
         active_workers=active_workers,
+        overlap_saved_s=overlap_saved_s,
     )
+
+
+def tree_ready(tree) -> bool:
+    """True iff every device array in ``tree`` has finished computing
+    (``jax.Array.is_ready``) — a non-blocking probe used by the overlap
+    pipeline to tell whether the in-flight learn was still running when
+    the concurrent collect finished."""
+    try:
+        return all(bool(leaf.is_ready()) for leaf in jax.tree.leaves(tree)
+                   if hasattr(leaf, "is_ready"))
+    except Exception:
+        return False
+
+
+class OverlapClock:
+    """Accounting for the double-buffered pipeline (DESIGN.md §11).
+
+    ``overlap_saved_s`` is the learn wall-clock hidden under the
+    concurrent collect, i.e. serial schedule minus pipelined schedule
+    for this iteration. Two cases at the moment the collect returns:
+
+    * the learn is **not** finished -> it ran under the entire collect,
+      so the hidden portion is the whole collect duration;
+    * the learn **is** finished -> the hidden portion is the learn's own
+      duration, estimated by ``learn_ref`` — the fastest *serial* learn
+      observed during warmup (post-compilation, so it is a clean
+      reference), capped by the collect duration.
+    """
+
+    def __init__(self):
+        self.learn_ref: Optional[float] = None
+
+    def note_serial(self, learn_s: float) -> None:
+        self.learn_ref = (learn_s if self.learn_ref is None
+                          else min(self.learn_ref, learn_s))
+
+    def saved(self, collect_s: float, learn_ready: bool) -> float:
+        if not learn_ready:
+            return collect_s
+        ref = self.learn_ref if self.learn_ref is not None else collect_s
+        return min(ref, collect_s)
 
 
 def record_log(logs: List[IterationLog], timer: PhaseTimer,
@@ -123,6 +185,23 @@ class SyncRunner(BackendCloseMixin):
     drives the composed observe -> sample -> learn step instead of raw
     ``learn``, owning the buffer state explicitly (``self.plane_state`` /
     ``self.buffer_state``) — it never hides inside ``opt_state``.
+
+    Overlap (``overlap=True``, requires ``train_step``): after two serial
+    warmup iterations (compile + a clean learn reference), each learn is
+    *dispatched* without blocking and the **next** iteration's collect
+    runs while it executes on the learner mesh — the collect acts with
+    one-version-stale params (stamped ``staleness=1.0`` on the iteration
+    that consumes it), and ``IterationLog.overlap_saved_s`` reports the
+    learn time hidden under the collect (DESIGN.md §11).
+
+    ``pin_params=True`` maintains a *second*, device-0 copy of the params
+    for collection: an FSDP-sharded learn result fed straight to the
+    single-device rollout would recompile it as a partitioned SPMD
+    computation across the learner mesh (and under overlap put the
+    collect on the very devices the learn is using). ``self.params``
+    itself stays mesh-resident — it must match the mesh-committed
+    opt_state at the next learn dispatch — so only the rollout reads the
+    pinned copy.
     """
 
     def __init__(self, rollout: Optional[Callable],
@@ -132,7 +211,9 @@ class SyncRunner(BackendCloseMixin):
                  num_samplers: Optional[int] = None, *,
                  backend: Optional[SamplerBackend] = None,
                  train_step: Optional[Callable] = None,
-                 plane_state: Any = None):
+                 plane_state: Any = None,
+                 overlap: bool = False,
+                 pin_params: bool = False):
         if backend is None:
             assert rollout is not None and carries is not None
             backend = InlineBackend(rollout, carries)
@@ -141,12 +222,22 @@ class SyncRunner(BackendCloseMixin):
         assert learn is not None or train_step is not None
         self.backend = backend
         self.learn = jax.jit(learn) if learn is not None else None
-        self._train_step = (jax.jit(train_step)
-                            if train_step is not None else None)
+        self._train_step = _maybe_jit_step(train_step)
         self.plane_state = plane_state
         self.params = params
         self.opt_state = opt_state
         self.num_samplers = backend.num_samplers
+        if overlap and train_step is None:
+            raise ValueError(
+                "overlap=True requires the experience-plane train_step "
+                "(the raw learn path has no buffer to double-buffer)")
+        self.overlap = overlap
+        self.pin_params = pin_params
+        self._collect_params = None       # device-0 copy (pin_params mode)
+        self._overlap_clock = OverlapClock()
+        self._overlap_done = 0            # pipeline-lifetime iteration
+        #                                   count: warmup is paid once per
+        #                                   runner, not once per run() call
         self.timer = PhaseTimer()
         self.logs: List[IterationLog] = []
 
@@ -154,9 +245,20 @@ class SyncRunner(BackendCloseMixin):
     def buffer_state(self):
         return None if self.plane_state is None else self.plane_state[0]
 
+    def _pin(self) -> None:
+        if self.pin_params:
+            self._collect_params = jax.device_put(self.params,
+                                                  jax.devices()[0])
+
+    def _rollout_params(self):
+        return (self._collect_params if self._collect_params is not None
+                else self.params)
+
     def run(self, iterations: int) -> List[IterationLog]:
+        if self.overlap:
+            return self._run_overlapped(iterations)
         for it in range(iterations):
-            merged, stats = self.backend.collect(self.params)
+            merged, stats = self.backend.collect(self._rollout_params())
             if self._train_step is not None:
                 (self.params, self.opt_state, self.plane_state, _,
                  learn_time) = timed_train_step(
@@ -165,11 +267,80 @@ class SyncRunner(BackendCloseMixin):
             else:
                 self.params, self.opt_state, _, learn_time = timed_learn(
                     self.learn, self.params, self.opt_state, merged)
+            self._pin()
             record_log(self.logs, self.timer,
                        assemble_log(it, stats.per_sampler_seconds,
                                     learn_time, merged, stats.samples,
                                     respawns=stats.respawns,
                                     active_workers=stats.active_workers))
+        return self.logs
+
+    # ----------------------------------------------------------- overlap
+    _OVERLAP_WARMUP = 2     # it 0 pays compilation, it 1 gives learn_ref
+
+    def _run_overlapped(self, iterations: int) -> List[IterationLog]:
+        """Double-buffered pipeline: dispatch iteration k's learn, run
+        iteration k+1's collect while it executes, then block. The first
+        ``_OVERLAP_WARMUP`` iterations stay fully serial, so short runs
+        (``iterations <= warmup``) are identical to ``overlap=False``.
+        Numerics are unchanged vs serial except that overlapped collects
+        act with params one learn behind (staleness 1.0 on the consuming
+        iteration's log) — the same staleness the async orchestrator
+        already accounts for."""
+        clock = self._overlap_clock
+        pending = None          # (merged, stats, staleness) pre-collected
+        for it in range(iterations):
+            if pending is None:
+                merged, stats = self.backend.collect(self._rollout_params())
+                stale = 0.0
+            else:
+                merged, stats, stale = pending
+                pending = None
+            warm, self._overlap_done = (self._overlap_done,
+                                        self._overlap_done + 1)
+            if warm < self._OVERLAP_WARMUP:
+                (self.params, self.opt_state, self.plane_state, _,
+                 learn_time) = timed_train_step(
+                     self._train_step, self.params, self.opt_state,
+                     self.plane_state, merged)
+                if warm > 0:    # iteration 0 includes compilation
+                    clock.note_serial(learn_time)
+                self._pin()
+                record_log(self.logs, self.timer,
+                           assemble_log(it, stats.per_sampler_seconds,
+                                        learn_time, merged, stats.samples,
+                                        staleness=stale,
+                                        respawns=stats.respawns,
+                                        active_workers=stats.active_workers))
+                continue
+            # dispatch the learn; do NOT block — self.params still refers
+            # to the pre-update arrays, which is exactly the one-version-
+            # stale policy the pipelined collect is specified to act with
+            t0 = time.perf_counter()
+            out = self._train_step(self.params, self.opt_state,
+                                   self.plane_state, merged)
+            saved = 0.0
+            if it + 1 < iterations:
+                # _rollout_params() was last pinned *before* this learn
+                # dispatched — the one-version-stale policy by construction
+                nxt, nstats = self.backend.collect(self._rollout_params())
+                saved = clock.saved(max(nstats.per_sampler_seconds),
+                                    tree_ready(out[0]))
+                pending = (nxt, nstats, 1.0)
+            self.params, self.opt_state, self.plane_state, _ = out
+            jax.block_until_ready(self.params)
+            window = time.perf_counter() - t0
+            self._pin()
+            # window spans the overlapped collect; subtracting the hidden
+            # portion leaves the *exposed* learn cost, so per iteration
+            # collect_time + learn_time + overlap_saved_s ~= serial wall
+            record_log(self.logs, self.timer,
+                       assemble_log(it, stats.per_sampler_seconds,
+                                    max(0.0, window - saved), merged,
+                                    stats.samples, staleness=stale,
+                                    respawns=stats.respawns,
+                                    active_workers=stats.active_workers,
+                                    overlap_saved_s=saved))
         return self.logs
 
     def close(self) -> None:
@@ -229,8 +400,7 @@ class AsyncOrchestrator(BackendCloseMixin):
             num_samplers = pool.num_workers
         assert learn is not None or train_step is not None
         self.learn = jax.jit(learn) if learn is not None else None
-        self._train_step = (jax.jit(train_step)
-                            if train_step is not None else None)
+        self._train_step = _maybe_jit_step(train_step)
         self.plane_state = plane_state
         self.store = PolicyStore(params)
         self.expq = ExperienceQueue(maxsize=queue_size)

@@ -11,12 +11,36 @@ directly; outside a sharded trace the call is *exactly*
   accumulates gradients with a ``lax.scan`` (gradient accumulation so the
   global batch scales past per-device memory), and
 * combines gradients across shards with a single ``lax.pmean`` per loss —
-  the one psum all-reduce of the schedule (DESIGN.md §9).
+  the one psum all-reduce of the replicated schedule (DESIGN.md §9).
 
 Because the pmean'd gradients and the replicated params are identical on
 every shard, global-norm clipping and the optimizer update are recomputed
 identically per shard and params *stay* replicated without any further
 collective.
+
+FSDP mode (DESIGN.md §11): when the learner activates the context with an
+``FsdpInfo``, params and Adam moments are *stored* sharded along the fsdp
+axes (ZeRO-3) and the schedule changes shape:
+
+* the learner body all-gathers sharded param leaves to full at entry
+  (``gather_params`` — per-layer tiled all-gathers), so algorithm code
+  sees full params unchanged (target networks, polyak, forward passes);
+* ``value_and_grad`` reduce-scatters the gradient of every sharded leaf
+  (``psum_scatter`` along the leaf's storage dim) instead of pmean'ing
+  it, so each shard ends the loss holding exactly its slice of the mean
+  gradient — same bytes on the wire as the all-reduce, but what lands is
+  the *storage* layout;
+* Adam moments never leave their shard: the moment update and the delta
+  are computed on the local gradient slice, which is the FSDP memory win
+  (``optim/adam.py``);
+* ``apply_updates`` all-gathers the local *update* slices back to full
+  (``expand_like``) so the in-body params stay full, and the body exit
+  slices params back to storage layout (``shard_params``).
+
+Sharded-vs-replicated is decided *host-side* from full shapes
+(``learner.ShardedLearner``) and carried here as shape-keyed tables —
+inside the trace a local slice's shape alone cannot tell you whether it
+was scattered (divisibility of the full dim is what decided).
 
 The context is module-global and trace-scoped (same pattern as
 ``distributed/context.py``): ``learner.py`` enters ``activate`` inside the
@@ -25,27 +49,48 @@ shard_map body, so only the wrapped trace sees it.
 from __future__ import annotations
 
 import contextlib
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.sharding import _key
+
+
+class FsdpInfo(NamedTuple):
+    """Host-side description of the FSDP storage layout for one learner.
+
+    Keys are ``(terminal leaf name, shape)`` — the layout rule
+    (``sharding.fsdp_leaf_dim``) depends only on those, so lookups work
+    on any subtree an algorithm hands us (``params["critic"]``, grads of
+    a loss over a sub-module) without threading tree paths around.
+    ``learner.ShardedLearner`` verifies at build time that no replicated
+    leaf's key collides with a sharded leaf's *local* key (degrading the
+    sharded leaf to replicated otherwise), so each table is unambiguous.
+    """
+    axes: Tuple[str, ...]                       # fsdp mesh axes (pod, data)
+    size: int                                   # product of axis sizes
+    full_table: Dict[Tuple[str, tuple], int]    # (name, full shape) -> dim
+    local_table: Dict[Tuple[str, tuple], int]   # (name, local shape) -> dim
 
 
 class _GradSyncCtx(NamedTuple):
     axes: Optional[Tuple[str, ...]]   # mesh axes to pmean over (None: off)
     microbatches: int                 # M accumulation steps (1: off)
+    fsdp: Optional[FsdpInfo] = None   # sharded param storage (None: off)
 
 
 _ACTIVE: Optional[_GradSyncCtx] = None
 
 
 @contextlib.contextmanager
-def activate(axes: Optional[Tuple[str, ...]], microbatches: int = 1):
+def activate(axes: Optional[Tuple[str, ...]], microbatches: int = 1,
+             fsdp: Optional[FsdpInfo] = None):
     """Enter the sync context for the duration of a (traced) train step."""
     global _ACTIVE
     prev = _ACTIVE
     _ACTIVE = _GradSyncCtx(tuple(axes) if axes else None,
-                           max(1, int(microbatches)))
+                           max(1, int(microbatches)), fsdp)
     try:
         yield _ACTIVE
     finally:
@@ -62,6 +107,11 @@ def reduce_axes() -> Optional[Tuple[str, ...]]:
     return _ACTIVE.axes if _ACTIVE is not None else None
 
 
+def fsdp_active() -> Optional[FsdpInfo]:
+    """The active FSDP layout, or None (replicated schedule / no trace)."""
+    return _ACTIVE.fsdp if _ACTIVE is not None else None
+
+
 def sync(tree):
     """pmean a gradient pytree across the active axes (no-op otherwise).
 
@@ -72,6 +122,109 @@ def sync(tree):
         return tree
     axes = _ACTIVE.axes
     return jax.tree.map(lambda g: jax.lax.pmean(g, axes), tree)
+
+
+# ------------------------------------------------------- FSDP reshaping
+def _name(path) -> str:
+    return _key(path[-1]) if path else ""
+
+
+def gather_params(tree):
+    """Entry all-gather: storage-layout (sharded) leaves -> full leaves.
+
+    One tiled ``all_gather`` per sharded leaf — the per-layer gather of
+    the FSDP schedule; replicated leaves pass through untouched.
+    """
+    f = fsdp_active()
+    if f is None:
+        return tree
+
+    def one(path, x):
+        dim = f.local_table.get((_name(path), tuple(x.shape)))
+        if dim is None:
+            return x
+        return jax.lax.all_gather(x, f.axes, axis=dim, tiled=True)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def shard_params(tree):
+    """Exit slice: full leaves -> this shard's storage slice (free — a
+    local dynamic-slice at the linear fsdp index, no collective)."""
+    f = fsdp_active()
+    if f is None:
+        return tree
+
+    def one(path, x):
+        dim = f.full_table.get((_name(path), tuple(x.shape)))
+        if dim is None:
+            return x
+        idx = jax.lax.axis_index(f.axes)
+        local = x.shape[dim] // f.size
+        return jax.lax.dynamic_slice_in_dim(x, idx * local, local, axis=dim)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def expand_like(u, p):
+    """All-gather a storage-layout leaf ``u`` up to ``p``'s full shape.
+
+    The scattered dim is inferred by comparing against ``p`` (the full
+    reference): FSDP shards exactly one dim, so at most one dim differs.
+    No-op outside FSDP or when the shapes already agree.
+    """
+    f = fsdp_active()
+    if f is None or u.shape == p.shape:
+        return u
+    dims = [d for d in range(u.ndim) if u.shape[d] != p.shape[d]]
+    if len(dims) != 1 or u.shape[dims[0]] * f.size != p.shape[dims[0]]:
+        raise ValueError(
+            f"expand_like: {u.shape} is not a {f.size}-way fsdp slice "
+            f"of {p.shape}")
+    return jax.lax.all_gather(u, f.axes, axis=dims[0], tiled=True)
+
+
+def localize_like(p, g):
+    """Slice a full leaf ``p`` down to ``g``'s storage-layout shape (the
+    inverse of :func:`expand_like` — e.g. weight-decay's param term next
+    to a scattered gradient). No-op outside FSDP or on equal shapes."""
+    f = fsdp_active()
+    if f is None or p.shape == g.shape:
+        return p
+    dims = [d for d in range(p.ndim) if p.shape[d] != g.shape[d]]
+    if len(dims) != 1 or g.shape[dims[0]] * f.size != p.shape[dims[0]]:
+        raise ValueError(
+            f"localize_like: {g.shape} is not a {f.size}-way fsdp slice "
+            f"of {p.shape}")
+    dim = dims[0]
+    idx = jax.lax.axis_index(f.axes)
+    return jax.lax.dynamic_slice_in_dim(
+        p, idx * g.shape[dim], g.shape[dim], axis=dim)
+
+
+def fsdp_sumsq(tree):
+    """Global sum-of-squares of a mixed-layout gradient tree.
+
+    Replicated leaves are identical on every shard (they were pmean'd) so
+    their square-sums add locally; scattered leaves each hold a disjoint
+    slice, so their local square-sums are combined with one ``psum`` over
+    the fsdp axes. Feeds ``optim.clip.global_norm`` under FSDP.
+    """
+    f = fsdp_active()
+    repl, shard = [], []
+
+    def one(path, x):
+        s = jnp.sum(jnp.square(x.astype(jnp.float32)))
+        if f.local_table.get((_name(path), tuple(x.shape))) is not None:
+            shard.append(s)
+        else:
+            repl.append(s)
+
+    jax.tree_util.tree_map_with_path(one, tree)
+    total = sum(repl) if repl else jnp.zeros((), jnp.float32)
+    if shard:
+        total = total + jax.lax.psum(sum(shard), f.axes)
+    return total
 
 
 def _combine_aux(stacked, mb: int):
@@ -98,6 +251,9 @@ def value_and_grad(loss_fn, params, batch, has_aux: bool = False):
     ``loss_fn(params, batch)`` must mean-reduce its loss over the batch's
     leading axis so microbatch/shard averaging composes exactly. Returns
     ``(out, grads)`` with the same contract as ``jax.value_and_grad``.
+    Under FSDP the gradient of every sharded-storage leaf comes back
+    **reduce-scattered** (this shard's slice of the cross-shard mean);
+    replicated leaves keep the pmean.
     """
     ctx = _ACTIVE
     m = ctx.microbatches if ctx is not None else 1
@@ -130,5 +286,20 @@ def value_and_grad(loss_fn, params, batch, has_aux: bool = False):
         else:
             out = jnp.mean(outs)
     if ctx is not None and ctx.axes:
-        grads = jax.tree.map(lambda g: jax.lax.pmean(g, ctx.axes), grads)
+        if ctx.fsdp is not None:
+            f = ctx.fsdp
+
+            def reduce(path, g):
+                dim = f.full_table.get((_name(path), tuple(g.shape)))
+                if dim is None:
+                    return jax.lax.pmean(g, ctx.axes)
+                # mean over shards, landed in storage layout: one
+                # reduce-scatter instead of the all-reduce
+                return jax.lax.psum_scatter(
+                    g, ctx.axes, scatter_dimension=dim, tiled=True) / f.size
+
+            grads = jax.tree_util.tree_map_with_path(reduce, grads)
+        else:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g, ctx.axes), grads)
     return out, grads

@@ -5,7 +5,12 @@ reference.
 These wrappers run **inside** the sharded learner's ``shard_map`` body:
 ``add``/``sample``/``update_priorities`` see the *local* (per-shard)
 buffer state and the local trajectory slice, and communicate only through
-``psum``-family collectives. ``init`` is the one host-side entry point —
+``psum``-family collectives. ``axes`` is whatever the learner mesh's
+batch axes are — ``("data",)`` single-pod or ``("pod", "data")`` on a
+multi-pod mesh: ``shard_index`` linearises the axes major-to-minor to
+match how ``shard_map`` splits a dim sharded over the same tuple, and
+every collective takes the tuple, so the plane spans the pod axis with
+no code difference. ``init`` is the one host-side entry point —
 it allocates the local state and tiles the sharded leaves ``D``× into the
 global arrays the plane carries between steps (``state_spec`` describes
 which leaves those are).

@@ -129,6 +129,13 @@ def _param_spec(path, leaf, cfg, mesh: Mesh, mode: str = "train") -> P:
         return P(*lead, model(dims[0]), None)
     if name in _MODEL_VEC and len(dims) == 1:
         return P(*lead, model(dims[0]))
+    # RL MLP dense weights (models/mlp_policy, ddpg/sac actor+critic
+    # stacks): generic ``w`` is (in, out) with ``x @ w`` contraction, so
+    # the contracting dim goes on the fsdp axes (ZeRO-3 storage layout);
+    # 1-D biases / log_std stay replicated — they are tiny and the
+    # per-layer all-gather schedule never pays for them.
+    if name == "w" and len(dims) == 2:
+        return P(*lead, col_in(dims[0]), col_out(dims[1]))
     if name == "b":                                    # generic bias
         return P(*lead, *([None] * len(dims)))
     return P(*lead, *([None] * len(dims)))
@@ -139,6 +146,30 @@ def _key(p) -> str:
         if hasattr(p, attr):
             return str(getattr(p, attr))
     return str(p)
+
+
+def fsdp_leaf_dim(path, leaf, mesh: Mesh) -> Optional[int]:
+    """Which dim of this leaf the train-mode ``_param_spec`` layout puts on
+    the **full** fsdp axis product — the learner plane's FSDP storage rule.
+
+    Returns the dim index, or None when the leaf stays replicated. Unlike
+    raw ``_param_spec`` (whose ``shard_axes`` may fall back to a *subset*
+    of the fsdp axes when only that subset divides the dim), the learner
+    shards over all of ``("pod", "data")`` or not at all: a uniform shard
+    count keeps the gather / reduce-scatter schedule identical for every
+    sharded leaf, and partial-divisibility falls back to replicated
+    exactly as the plain non-divisible case does.
+    """
+    fs = fsdp_axes(mesh)
+    n = axes_size(mesh, fs)
+    if n <= 1:
+        return None
+    spec = _param_spec(path, leaf, None, mesh, "train")
+    full = fs if len(fs) > 1 else fs[0]
+    for d, entry in enumerate(spec):
+        if entry == full:
+            return d
+    return None
 
 
 def param_specs(cfg, params_shape: Any, mesh: Mesh, mode: str = "train"):

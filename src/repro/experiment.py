@@ -84,6 +84,22 @@ class Schedule:
     #                                       unchanged — DESIGN.md §9)
     learner_microbatches: int = 1         # gradient-accumulation slices per
     #                                       (per-shard) batch
+    fsdp: bool = False                    # shard params + Adam moments over
+    #                                       the learner mesh's fsdp axes per
+    #                                       the _param_spec layout rules
+    #                                       (requires learner_devices > 1;
+    #                                       off: replicated, bitwise
+    #                                       unchanged — DESIGN.md §11)
+    overlap: bool = False                 # double-buffered pipeline: run
+    #                                       iteration k+1's collect while
+    #                                       iteration k's learn executes
+    #                                       (sync/fused runtimes; async
+    #                                       already overlaps by design)
+    learner_pods: int = 1                 # split the learner shards over a
+    #                                       (pod, data, model) mesh — the
+    #                                       multi-pod production axis names,
+    #                                       so the step lowers across the
+    #                                       DCN boundary (DESIGN.md §11)
     max_respawns: int = 3                 # process backend: crash-loop
     #                                       budget per worker (consecutive
     #                                       failures before the run fails;
@@ -196,8 +212,22 @@ def _validate_learner(spec: ExperimentSpec, algo, sched: Schedule,
                       devices: int, vector: bool):
     """Shape/compatibility checks for the multi-device learner, eager and
     pointed (the shard_map errors they preempt are cryptic)."""
+    if sched.fsdp and devices <= 1:
+        raise ValueError(
+            "schedule.fsdp shards params/opt-state across the learner "
+            "mesh; it requires learner_devices > 1 (a 1-device run has "
+            "nothing to shard — and stays on the bitwise single-device "
+            "path)")
+    if sched.learner_pods > 1 and devices <= 1:
+        raise ValueError(
+            "schedule.learner_pods splits the learner shards over a "
+            "(pod, data, model) mesh; it requires learner_devices > 1")
     if devices <= 1:
         return
+    if sched.learner_pods > 1 and devices % sched.learner_pods:
+        raise ValueError(
+            f"learner_pods={sched.learner_pods} must divide "
+            f"learner_devices={devices}")
     if not getattr(algo, "shardable", False):
         raise ValueError(
             f"algo {spec.algo!r} does not support learner_devices > 1 "
@@ -311,12 +341,24 @@ def build(spec: ExperimentSpec):
     rollout = algo.make_rollout(env, sched.horizon)
     learner_devices = int(sched.learner_devices or 1)
     learner_micro = int(sched.learner_microbatches or 1)
+    if sched.overlap and spec.runtime == "async":
+        raise ValueError(
+            "schedule.overlap pipelines the sync/fused loop; the async "
+            "runtime's free-running samplers already overlap collect "
+            "with learn by construction — drop overlap or use "
+            "runtime='sync'")
+    _validate_learner(spec, algo, sched, learner_devices, vector)
     if learner_devices > 1 or learner_micro > 1:
-        _validate_learner(spec, algo, sched, learner_devices, vector)
         from repro.distributed.learner import ShardedLearner
         learner = ShardedLearner(algo, buffer,
                                  num_devices=learner_devices,
-                                 microbatches=learner_micro)
+                                 microbatches=learner_micro,
+                                 fsdp=sched.fsdp, pods=sched.learner_pods,
+                                 # under overlap the learner mesh starts at
+                                 # device 1 whenever devices allow, so the
+                                 # pipelined collect (device 0) and the
+                                 # learn genuinely execute concurrently
+                                 offset=1 if sched.overlap else 0)
         # the (possibly sharded) wrapper allocates the plane below —
         # sharded ring/tree leaves tiled to global size
         buffer = learner.buffer
@@ -325,6 +367,11 @@ def build(spec: ExperimentSpec):
         # learner_devices in (None, 1): the historical single-device
         # composition, untouched (the bitwise guarantee)
         train_step = make_train_step(algo, buffer)
+    # a mesh-resident (or FSDP-sharded) learn result must come back to the
+    # rollout's device between steps once the runner loop has a reason to
+    # care which device params live on (jit of the wrapped step means the
+    # learner's own device_put branch never fires under the runners)
+    pin_params = learner_devices > 1 and (sched.fsdp or sched.overlap)
     plane_key = jax.random.fold_in(jax.random.PRNGKey(sched.seed),
                                    _PLANE_KEY_TAG)
 
@@ -342,7 +389,8 @@ def build(spec: ExperimentSpec):
         return FusedRunner(env, None, params, opt_state, carry,
                            horizon=sched.horizon, chunk=sched.chunk,
                            rollout=rollout, train_step=train_step,
-                           plane_state=plane_for([carry]))
+                           plane_state=plane_for([carry]),
+                           overlap=sched.overlap)
 
     # process backend: worker count may be named separately
     # (schedule.num_workers); worker i inherits sampler i's seed, so the
@@ -425,7 +473,8 @@ def build(spec: ExperimentSpec):
                            step_keys=algo.step_keys,
                            tail_keys=algo.tail_keys, **extra)
     return SyncRunner(None, None, params, opt_state, backend=backend,
-                      train_step=train_step, plane_state=plane_for(carries))
+                      train_step=train_step, plane_state=plane_for(carries),
+                      overlap=sched.overlap, pin_params=pin_params)
 
 
 def run(spec: ExperimentSpec,

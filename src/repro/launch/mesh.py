@@ -30,6 +30,39 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(arr, axes)
 
 
+def make_learner_mesh(num_devices: int, pods: int = 1, offset: int = 0):
+    """The learner plane's mesh: ``(data, model)`` over ``num_devices``
+    devices, or ``(pod, data, model)`` when ``pods > 1`` — the same axis
+    names as ``make_production_mesh``, so a step built here lowers
+    unchanged on the multi-pod production mesh (the ``pod`` axis extends
+    the data axis across the DCN boundary; ``fsdp_axes`` spans both).
+
+    ``offset`` starts the mesh at ``jax.devices()[offset:]`` — the overlap
+    pipeline places the learner on devices disjoint from the rollout's
+    device 0 so collect and learn genuinely execute concurrently.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    if offset + num_devices > len(devices):
+        offset = max(0, len(devices) - num_devices)
+    if num_devices > len(devices):
+        raise ValueError(
+            f"learner_devices={num_devices} but only {len(devices)} JAX "
+            f"device(s) are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_devices} "
+            f"before importing jax")
+    if pods > 1 and num_devices % pods:
+        raise ValueError(
+            f"learner_pods={pods} must divide learner_devices="
+            f"{num_devices}")
+    arr = np.asarray(devices[offset:offset + num_devices])
+    if pods > 1:
+        return Mesh(arr.reshape(pods, num_devices // pods, 1),
+                    ("pod", "data", "model"))
+    return Mesh(arr.reshape(num_devices, 1), ("data", "model"))
+
+
 def make_host_mesh():
     """1-device mesh for CPU smoke tests (no placeholder devices)."""
     import numpy as np

@@ -101,6 +101,9 @@ def spec_from_args(args) -> ExperimentSpec:
             env_batch=args.env_batch,
             learner_devices=args.learner_devices,
             learner_microbatches=args.learner_microbatches,
+            fsdp=args.fsdp,
+            overlap=args.overlap,
+            learner_pods=args.learner_pods,
             max_respawns=args.max_respawns,
             min_workers=args.min_workers,
             max_workers=args.max_workers,
@@ -215,6 +218,22 @@ def main() -> None:
     ap.add_argument("--learner-microbatches", type=int, default=1,
                     help="gradient-accumulation slices per (per-shard) "
                          "learner batch")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params and Adam moments across the "
+                         "learner mesh per the _param_spec layout rules "
+                         "(per-layer all-gather + reduce-scattered grads; "
+                         "requires --learner-devices > 1 — DESIGN.md §11)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered pipeline: dispatch iteration "
+                         "k's learn and run iteration k+1's collect "
+                         "while it executes (sync/fused runtimes; "
+                         "IterationLog.overlap_saved_s reports the "
+                         "hidden learn time)")
+    ap.add_argument("--learner-pods", type=int, default=1,
+                    help="split the learner shards over a (pod, data, "
+                         "model) mesh — the multi-pod production axis "
+                         "names, so the same step lowers across the DCN "
+                         "boundary (must divide --learner-devices)")
     ap.add_argument("--chunk", type=int, default=None,
                     help="fused backend: iterations per device dispatch "
                          "(default: all of --iterations in one chunk)")

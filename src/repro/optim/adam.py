@@ -1,7 +1,13 @@
 """Adam / AdamW on pytrees (no optax; optimizer state is a plain pytree).
 
-The optimizer moments inherit the *sharding* of the parameters under jit, so
-FSDP-sharded params automatically give FSDP-sharded optimizer state.
+The optimizer moments inherit the *sharding* of the parameters: the
+moment trees share the params' tree paths and leaf names, so the learner
+plane's layout rules (``distributed/sharding.fsdp_leaf_dim``) give each
+moment exactly its param's spec. Under the FSDP learner (DESIGN.md §11)
+the moments *stay* in storage layout through the whole step — ``update``
+consumes the reduce-scattered gradient slice next to the local moment
+slice, and only the resulting update slice is all-gathered
+(``apply_updates``), which is the FSDP memory win.
 """
 from __future__ import annotations
 
@@ -56,7 +62,12 @@ def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
             v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
             delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
             if weight_decay:
-                delta = delta + weight_decay * p.astype(jnp.float32)
+                # FSDP: the gradient/moments may be a storage-layout
+                # slice while p is full — decay with the matching slice
+                from repro.distributed import grad_sync
+                pf = grad_sync.localize_like(p, g) \
+                    if grad_sync.fsdp_active() else p
+                delta = delta + weight_decay * pf.astype(jnp.float32)
             return (-lr_t * delta).astype(p.dtype), m2.astype(m.dtype), \
                 v2.astype(v.dtype)
 
@@ -73,4 +84,10 @@ def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
 
 
 def apply_updates(params, updates):
+    from repro.distributed import grad_sync
+    if grad_sync.fsdp_active() is not None:
+        # sharded-storage leaves carry update *slices*: all-gather each
+        # back to full (per-layer, tiled) so in-body params stay full
+        updates = jax.tree.map(
+            lambda p, u: grad_sync.expand_like(u, p), params, updates)
     return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -6,6 +6,12 @@ import jax.numpy as jnp
 
 
 def global_norm(tree) -> jnp.ndarray:
+    from repro.distributed import grad_sync
+    if grad_sync.fsdp_active() is not None:
+        # mixed-layout tree (FSDP learner): scattered leaves hold disjoint
+        # slices, so the true global norm needs one psum over their
+        # square-sums; the replicated path below stays bitwise-untouched
+        return jnp.sqrt(grad_sync.fsdp_sumsq(tree))
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                         for x in leaves))
